@@ -1,0 +1,44 @@
+"""Paper Fig. 8 — effect of T0 and iter on the improvement of G.
+
+Cases mirror the paper: (10 req, b=1), (20 req, b=2), (40 req, b=4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (PAPER_TABLE2, SAParams, as_arrays, evaluate,
+                        fcfs_schedule, priority_mapping)
+from repro.data.synthetic import sample_requests
+
+
+def improvement(arrays, model, max_batch, params):
+    n = len(arrays["input_len"])
+    p0, b0 = fcfs_schedule(n, max_batch)
+    g0 = evaluate(arrays, model, p0, b0).G
+    res = priority_mapping(arrays, model, max_batch, params)
+    return (res.G - g0) / g0 if g0 > 0 else 0.0
+
+
+def main(quick: bool = False):
+    rows = []
+    cases = [(10, 1), (20, 2), (40, 4)]
+    T0s = [100, 200, 500] if not quick else [100, 500]
+    iters = [50, 100, 200] if not quick else [50, 100]
+    for n, mb in cases:
+        arrays = as_arrays(sample_requests(n, seed=31 + n))
+        for T0 in T0s:
+            for it in iters:
+                params = SAParams(T0=T0, iters=it, seed=7,
+                                  budget_mode="per_level")
+                (imp), dt = timeit(improvement, arrays, PAPER_TABLE2, mb,
+                                   params, repeat=1)
+                rows.append([f"fig8_n{n}_b{mb}_T{T0}_i{it}",
+                             round(dt * 1e6, 1),
+                             f"G_improvement={imp:.4f}"])
+    emit(rows, ["name", "us_per_call", "derived"], "fig8_annealing_params")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

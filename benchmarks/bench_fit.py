@@ -1,0 +1,112 @@
+"""Paper §4.2 / Table 2 — latency-model fit quality.
+
+Two studies:
+  * synthetic: generate samples from the Table-2 ground truth + 2% noise,
+    re-fit, report prediction R² (coefficient-space recovery is ill-posed
+    for near-zero coefficients like γ_d, so prediction quality is the
+    meaningful metric).
+  * engine: controlled (batch × length) sweep timing the REAL jitted JAX
+    prefill/decode steps on CPU, median-of-3; fit; report R².
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import LinearLatencyModel, PAPER_TABLE2, fit
+
+
+def _r2(y, yp):
+    ss_res = np.sum((y - yp) ** 2)
+    ss_tot = np.sum((y - np.mean(y)) ** 2)
+    return 1 - ss_res / ss_tot if ss_tot > 0 else 1.0
+
+
+def synthetic_fit_recovery():
+    rng = np.random.default_rng(0)
+    true = PAPER_TABLE2
+    pre, dec = [], []
+    for b in (1, 2, 4, 8, 16, 32):
+        for l in range(100, 2000, 150):
+            pre.append((b, l, true.prefill_time(b, l) * rng.normal(1, 0.02)))
+            dec.append((b, l, true.per_token_decode_time(b, l)
+                        * rng.normal(1, 0.02)))
+    m = fit(pre, dec)
+    pre = np.array(pre)
+    dec = np.array(dec)
+    r2p = _r2(pre[:, 2], m.prefill_time(pre[:, 0], pre[:, 1]))
+    r2d = _r2(dec[:, 2], m.per_token_decode_time(dec[:, 0], dec[:, 1]))
+    return m, float(r2p), float(r2d)
+
+
+def engine_profile_fit(quick: bool = False):
+    """Controlled sweep over the real jitted prefill/decode steps."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import (ModelConfig, forward_decode, forward_full,
+                              init_cache, init_params)
+
+    cfg = ModelConfig(name="prof", family="dense", num_layers=4,
+                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
+                      vocab_size=2048, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 512 if quick else 1024
+
+    @jax.jit
+    def prefill(params, toks):
+        logits, _, _ = forward_full(params, cfg, tokens=toks, last_only=True)
+        return logits
+
+    @jax.jit
+    def decode(params, cache, toks):
+        return forward_decode(params, cfg, tokens=toks, cache=cache)
+
+    rng = np.random.default_rng(0)
+    pre_samples, dec_samples = [], []
+    batches = (1, 2, 4) if quick else (1, 2, 4, 8)
+    lens = (64, 128, 256) if quick else (64, 128, 256, 512, 768)
+    for b in batches:
+        for l in lens:
+            toks = jnp.asarray(rng.integers(0, 2048, (b, l)), jnp.int32)
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                prefill(params, toks).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            pre_samples.append((b, l, float(np.median(ts[1:]))))
+            cache = init_cache(cfg, b, max_len)
+            cache["pos"] = jnp.full((b,), l, jnp.int32)
+            tok1 = toks[:, :1]
+            ts = []
+            for _ in range(4):
+                t0 = time.perf_counter()
+                lg, cache = decode(params, cache, tok1)
+                lg.block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            dec_samples.append((b, l, float(np.median(ts[1:]))))
+    m = fit(pre_samples, dec_samples)
+    pre = np.array(pre_samples)
+    dec = np.array(dec_samples)
+    r2p = _r2(pre[:, 2], m.prefill_time(pre[:, 0], pre[:, 1]))
+    r2d = _r2(dec[:, 2], m.per_token_decode_time(dec[:, 0], dec[:, 1]))
+    return m, float(r2p), float(r2d), len(pre_samples), len(dec_samples)
+
+
+def main(quick: bool = False):
+    rows = []
+    (m, r2p, r2d), dt = timeit(synthetic_fit_recovery, repeat=1)
+    rows.append(["table2_synthetic_recovery", round(dt * 1e6, 1),
+                 f"prefill_R2={r2p:.4f};decode_R2={r2d:.4f}"])
+    (m2, r2p, r2d, np_, nd), dt = timeit(engine_profile_fit, quick, repeat=1)
+    rows.append(["table2_engine_fit", round(dt * 1e6, 1),
+                 f"prefill_R2={r2p:.4f};decode_R2={r2d:.4f};"
+                 f"samples={np_}+{nd};alpha_p={m2.alpha_p:.3g};"
+                 f"delta_d={m2.delta_d:.3g}"])
+    emit(rows, ["name", "us_per_call", "derived"], "table2_fit")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

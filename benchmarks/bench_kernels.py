@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness deltas vs oracle
+and XLA-reference timings on CPU.  On real TPU hardware the same harness
+times the compiled kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def main(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    # flash attention
+    B, S, H, KV, hd = 2, 256, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    r, t_ref = timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_ref(q, k, v)), repeat=2)
+    o, t_pal = timeit(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)),
+        repeat=1)
+    err = float(jnp.max(jnp.abs(o - r)))
+    rows.append(["flash_attention_256", round(t_ref * 1e6, 1),
+                 f"interpret_err={err:.2e}"])
+
+    # decode attention
+    L = 2048 if not quick else 512
+    kc = jax.random.normal(ks[1], (B, L, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, L, KV, hd), jnp.float32)
+    qd = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    nv = jnp.array([L // 2, L], jnp.int32)
+    r, t_ref = timeit(lambda: jax.block_until_ready(
+        ref.decode_attention_ref(qd, kc, vc, nv)), repeat=2)
+    o, _ = timeit(lambda: jax.block_until_ready(
+        decode_attention(qd, kc, vc, nv, block_k=256, interpret=True)),
+        repeat=1)
+    err = float(jnp.max(jnp.abs(o - r)))
+    rows.append([f"decode_attention_L{L}", round(t_ref * 1e6, 1),
+                 f"interpret_err={err:.2e}"])
+
+    # ssd scan
+    b, s, nh, hdim, ds = 2, 256, 4, 64, 32
+    x = jax.random.normal(ks[0], (b, s, nh, hdim), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (b, s, ds))
+    Cm = jax.random.normal(ks[4], (b, s, ds))
+    (yr, _), t_ref = timeit(lambda: jax.tree.map(
+        jax.block_until_ready, ref.ssd_ref(x, dt, A, Bm, Cm, chunk=64)),
+        repeat=2)
+    (y, _), _ = timeit(lambda: jax.tree.map(
+        jax.block_until_ready,
+        ssd_scan(x, dt, A, Bm, Cm, chunk=64, interpret=True)), repeat=1)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    rows.append([f"ssd_scan_{s}", round(t_ref * 1e6, 1),
+                 f"interpret_err={err:.2e}"])
+    emit(rows, ["name", "us_per_call", "derived"], "kernels")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

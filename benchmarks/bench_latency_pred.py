@@ -1,0 +1,50 @@
+"""Paper Fig. 10 — sensitivity of G to latency-predictor coefficient error.
+
+Planning uses perturbed fitting parameters (±10/20/30% on α, β, γ, δ);
+execution uses the true model.  10 requests, max batch 4 (paper setup).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (PAPER_TABLE2, SAParams, as_arrays, priority_mapping,
+                        run_priority_continuous)
+from repro.data.synthetic import sample_requests
+
+TRUE = PAPER_TABLE2
+
+
+def _batches(reqs, res):
+    nb = int(res.batch_id[-1]) + 1
+    return [[reqs[i] for i, b in zip(res.perm, res.batch_id) if b == j]
+            for j in range(nb)]
+
+
+def main(quick: bool = False):
+    rows = []
+    reqs = sample_requests(10, seed=55)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    arrays = as_arrays(reqs)
+    res0 = priority_mapping(arrays, TRUE, 4,
+                            SAParams(seed=3, budget_mode="per_level"))
+    g0 = run_priority_continuous(_batches(reqs, res0), TRUE, 4).G
+    rows.append(["fig10_exact", 0.0, f"G={g0:.4f};degradation=0.0"])
+    whichs = ["alpha", "beta", "gamma", "delta", "all"]
+    rels = [-0.3, -0.2, -0.1, 0.1, 0.2, 0.3] if not quick else [-0.2, 0.2]
+    for which in whichs:
+        for rel in rels:
+            pert = TRUE.perturbed(rel, which)
+            res, dt = timeit(priority_mapping, arrays, pert, 4,
+                             SAParams(seed=3, budget_mode="per_level"),
+                             repeat=1)
+            g = run_priority_continuous(_batches(reqs, res), TRUE, 4).G
+            rows.append([f"fig10_{which}_{rel:+.0%}", round(dt * 1e6, 1),
+                         f"G={g:.4f};degradation={(g0 - g) / g0:.4f}"])
+    emit(rows, ["name", "us_per_call", "derived"], "fig10_latency_pred")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

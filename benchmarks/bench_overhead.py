@@ -1,0 +1,38 @@
+"""Paper Table 1 — scheduling overhead: simulated annealing vs exhaustive
+search, request numbers 4/6/8/10, max batch size 1."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core import (PAPER_TABLE2, SAParams, as_arrays, exhaustive_search,
+                        priority_mapping)
+from repro.core.annealing_jax import JaxSAConfig, priority_mapping_jax
+from repro.data.synthetic import sample_requests
+
+
+def main(quick: bool = False):
+    rows = []
+    for n in (4, 6, 8, 10):
+        reqs = sample_requests(n, seed=n)
+        arrays = as_arrays(reqs)
+        _, t_sa = timeit(priority_mapping, arrays, PAPER_TABLE2, 1,
+                         SAParams(seed=0), repeat=3)
+        rows.append([f"table1_sa_n{n}", round(t_sa * 1e6, 1),
+                     f"seconds={t_sa:.5f}"])
+        # jitted annealer (beyond-paper): report warm time
+        priority_mapping_jax(arrays, PAPER_TABLE2, 1,
+                             JaxSAConfig(num_chains=4), seed=0)
+        _, t_jax = timeit(priority_mapping_jax, arrays, PAPER_TABLE2, 1,
+                          JaxSAConfig(num_chains=4), seed=1, repeat=3)
+        rows.append([f"table1_sa_jax_n{n}", round(t_jax * 1e6, 1),
+                     f"seconds={t_jax:.5f}"])
+        if n <= (6 if quick else 8):
+            _, t_ex = timeit(exhaustive_search, arrays, PAPER_TABLE2, 1,
+                             repeat=1)
+            rows.append([f"table1_exhaustive_n{n}", round(t_ex * 1e6, 1),
+                         f"seconds={t_ex:.5f}"])
+    emit(rows, ["name", "us_per_call", "derived"], "table1_overhead")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

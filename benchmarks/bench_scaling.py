@@ -1,0 +1,64 @@
+"""Paper Fig. 11 — multi-instance scalability: G enhancement and scheduling
+overhead for 1–4 instances (10 requests replicated per instance, as in the
+paper's setup)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (PAPER_TABLE2, SAParams, SLOAwareScheduler,
+                        run_fcfs_continuous, run_priority_continuous)
+from repro.core.profiler import MemoryModel
+from repro.data.synthetic import sample_requests
+
+MODEL = PAPER_TABLE2
+
+
+def main(quick: bool = False):
+    rows = []
+    base_reqs = sample_requests(10, seed=21)
+    for r in base_reqs:
+        r.predicted_output_len = r.output_len
+    for n_inst in (1, 2, 4) if quick else (1, 2, 3, 4):
+        reqs = []
+        rid = 0
+        for copy in range(n_inst):
+            for r in base_reqs:
+                import dataclasses
+                rr = dataclasses.replace(r, req_id=rid)
+                reqs.append(rr)
+                rid += 1
+        sched = SLOAwareScheduler(
+            MODEL, num_instances=n_inst, max_batch=4,
+            memory=MemoryModel(total_memory=32e9, mu=0.9,
+                               sigma_per_token=2e5),
+            sa_params=SAParams(seed=9))   # paper-default budget
+        t0 = time.perf_counter()
+        out = sched.schedule(reqs)
+        dt = time.perf_counter() - t0
+        parts = [run_priority_continuous(q.batches, MODEL, 4)
+                 for q in out.queues]
+        met = sum(sum(p.met.values()) for p in parts)
+        tot = sum(p.total_latency for p in parts)
+        class _S:  # noqa: N801
+            G = met / tot if tot else 0.0
+        sim = _S()
+        # FCFS baseline: same requests round-robin across instances
+        base_g = 0.0
+        fcfs_parts = [run_fcfs_continuous(reqs[i::n_inst], MODEL, 4)
+                      for i in range(n_inst)]
+        met = sum(sum(p.met.values()) for p in fcfs_parts)
+        tot = sum(p.total_latency for p in fcfs_parts)
+        base_g = met / tot if tot else 0.0
+        rows.append([f"fig11_inst{n_inst}", round(dt * 1e6, 1),
+                     f"G={sim.G:.4f};G_fcfs={base_g:.4f};"
+                     f"enhancement={(sim.G - base_g) / base_g if base_g else 0:.3f};"
+                     f"sched_ms={dt * 1e3:.2f}"])
+    emit(rows, ["name", "us_per_call", "derived"], "fig11_scaling")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

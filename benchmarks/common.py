@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def emit(rows, header, name):
+    """Print ``name,us_per_call,derived`` CSV rows + save the full table."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"# saved {path}")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def timeit(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,95 @@
+"""HLO inspection utility for the perf loop: list the largest collectives
+(with source attribution via op metadata) for one (arch × shape × mesh).
+
+  PYTHONPATH=src python -m benchmarks.hlo_inspect --arch phi4-mini-3.8b \
+      --shape train_4k [--multi-pod] [--top 15]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse    # noqa: E402
+import re          # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+
+_SHAPE_RE = dryrun._SHAPE_RE
+_BYTES = dryrun._BYTES
+
+
+def top_collectives(hlo: str, top: int = 15):
+    rows = []
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.search(r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        lhs = s.split("=")[0] + "=" + s.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = 0
+        shapes = []
+        for sm in _SHAPE_RE.finditer(lhs):
+            n = 1
+            dims = sm.group(2)
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES[sm.group(1)]
+            shapes.append(f"{sm.group(1)}[{dims}]")
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', s)
+        if mm:
+            meta = mm.group(1)
+        rows.append((nbytes, m.group(1), ";".join(shapes[:2]), meta[:150]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--attn-auto", action="store_true",
+                    help="sequence-parallel attention constraints")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache")
+    args = ap.parse_args()
+    from repro.distributed.sharding import ParallelismConfig
+    from repro.launch.mesh import make_production_mesh
+    cfg = dryrun.get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    par = None
+    tp_gb = cfg.param_count() * 2 / 16 / 2**30
+    par = ParallelismConfig(
+        dp_axes=("pod", "data") if args.multi_pod else ("data",),
+        fsdp=(not args.no_fsdp) and
+             (dryrun.SHAPES[args.shape]["kind"] == "train" or tp_gb > 8),
+        expert_parallel=args.expert_parallel,
+        attn_sharding="auto" if args.attn_auto else "none")
+    fn, a, in_sh, out_sh = dryrun.build_step(cfg, args.shape, mesh, par,
+                                             kv_quant=args.kv_quant)
+    import jax
+    compiled = jax.jit(fn, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*a).compile()
+    hlo = compiled.as_text()
+    print(f"== top collectives: {args.arch} × {args.shape} ==")
+    total = 0
+    for nbytes, kind, shape, meta in top_collectives(hlo, args.top):
+        total += nbytes
+        print(f"{nbytes / 2**20:10.1f} MiB  {kind:18s} {shape:34s} {meta}")
+    coll, counts = dryrun.collective_bytes(hlo)
+    print("totals MiB:", {k: round(v / 2**20, 1) for k, v in coll.items()
+                          if v})
+    rec = dryrun.analyze(compiled)
+    print(f"flops/dev={rec['flops_per_device']:.4g} "
+          f"peak={rec['peak_bytes'] / 2**30:.2f}GiB "
+          f"args={rec['argument_bytes'] / 2**30:.2f}GiB "
+          f"coll_total={sum(coll.values()) / 2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

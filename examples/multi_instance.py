@@ -1,0 +1,63 @@
+"""Multi-instance SLO-aware scheduling (Algorithm 2, paper §4.4 / Fig. 11).
+
+Requests are assigned round-robin to the instance with the largest
+remaining memory (Eq. 20 token accounting), priority-mapped independently
+per instance (embarrassingly parallel), and dispatched.
+
+Run:  PYTHONPATH=src python examples/multi_instance.py [--instances 4]
+"""
+import argparse
+import time
+
+from repro.core import (PAPER_TABLE2, SAParams, SLOAwareScheduler,
+                        run_fcfs_continuous, run_priority_continuous)
+from repro.core.profiler import MemoryModel
+from repro.data.synthetic import sample_requests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--n", type=int, default=40)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    model = PAPER_TABLE2
+    reqs = sample_requests(args.n, seed=5)
+    for r in reqs:
+        r.predicted_output_len = r.output_len      # S3-style oracle predictor
+
+    # 32 GB per instance; ~200 kB KV per token at 7B fp16 (Eq. 20)
+    memory = MemoryModel(total_memory=32e9, mu=0.9, sigma_per_token=2e5)
+    sched = SLOAwareScheduler(model, num_instances=args.instances,
+                              max_batch=args.max_batch, memory=memory,
+                              sa_params=SAParams(seed=0,
+                                                 budget_mode="per_level"))
+    t0 = time.perf_counter()
+    outcome = sched.schedule(reqs)
+    dt = time.perf_counter() - t0
+
+    met = tot = 0
+    for q in outcome.queues:
+        sim = run_priority_continuous(q.batches, model, args.max_batch)
+        met += sum(sim.met.values())
+        tot += sim.total_latency
+        print(f"instance {q.instance_id}: {len(q)} requests, "
+              f"{len(q.batches)} planned batches, "
+              f"G={sim.G:.4f}, attainment={sim.attainment:.2f}")
+    print(f"\noverall G={met / tot if tot else 0:.4f}  "
+          f"scheduling overhead={dt * 1e3:.2f} ms "
+          f"({args.instances} instances, sequential host)")
+
+    # FCFS baseline with the same round-robin split
+    met = tot = 0
+    for i in range(args.instances):
+        sim = run_fcfs_continuous(reqs[i::args.instances], model,
+                                  args.max_batch)
+        met += sum(sim.met.values())
+        tot += sim.total_latency
+    print(f"FCFS     G={met / tot if tot else 0:.4f}")
+
+
+if __name__ == "__main__":
+    main()

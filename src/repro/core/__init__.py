@@ -1,0 +1,32 @@
+"""The paper's primary contribution: SLO-aware scheduling for LLM inference.
+
+Components: latency predictor (Eqs. 14-19), request profiler, simulated-
+annealing priority mapper (Algorithm 1), multi-instance scheduler
+(Algorithm 2), objective G (Eq. 2), exhaustive-search oracle, and the
+discrete-event execution simulator used by the benchmarks.
+"""
+from repro.core.slo import SLO, Request, as_arrays, meets_slo
+from repro.core.latency_model import LinearLatencyModel, PAPER_TABLE2, fit
+from repro.core.objective import (ScheduleEval, calculate_g, evaluate,
+                                  fcfs_schedule, sorted_by_e2e_schedule)
+from repro.core.annealing import SAParams, SAResult, priority_mapping
+from repro.core.exhaustive import exhaustive_search
+from repro.core.profiler import (LatencyProfiler, MemoryModel,
+                                 OutputLengthPredictor)
+from repro.core.scheduler import (InstanceQueue, ScheduleOutcome,
+                                  SLOAwareScheduler)
+from repro.core.simulator import (SimResult, run_fcfs_continuous,
+                                  run_multi_instance, run_planned,
+                                  run_priority_continuous)
+
+__all__ = [
+    "SLO", "Request", "as_arrays", "meets_slo",
+    "LinearLatencyModel", "PAPER_TABLE2", "fit",
+    "ScheduleEval", "calculate_g", "evaluate", "fcfs_schedule",
+    "sorted_by_e2e_schedule",
+    "SAParams", "SAResult", "priority_mapping", "exhaustive_search",
+    "LatencyProfiler", "MemoryModel", "OutputLengthPredictor",
+    "InstanceQueue", "ScheduleOutcome", "SLOAwareScheduler",
+    "SimResult", "run_fcfs_continuous", "run_multi_instance", "run_planned",
+    "run_priority_continuous",
+]

@@ -1,0 +1,174 @@
+"""Algorithm 1 — simulated-annealing priority mapping (Python reference).
+
+The working representation is ``batches: list[list[request_index]]`` —
+contiguous priority order with explicit batch boundaries.  Three move
+types (paper §4.3):
+
+  0. squeezeLastIter — move a request into the *previous* batch iteration
+     (valid when it is not in the first iteration and the previous batch has
+     space).
+  1. delayNextIter — move a request into the *next* batch iteration (valid
+     when the next batch has space; delaying from the final batch opens a
+     new iteration).
+  2. randSwapping — exchange the positions of two requests.
+
+Acceptance: the paper's pseudocode line 32 (`exp(-(f_new-f)/T) < rand`)
+as literally printed never accepts a worse solution (the exponent is
+positive, so exp(·) > 1 > rand).  That degenerates to greedy descent and
+contradicts the paper's own discussion of escaping local optima, so we
+implement standard Metropolis acceptance on the *relative* objective delta,
+
+    P(accept worse) = exp( (f_new - f) / (f_ref · T / T0) ),
+
+which at T = T0 accepts a −10% move with p ≈ 0.9 and at T = T_thres
+(20/500) with p ≈ 0.08 — matching the qualitative behaviour in Fig. 8.
+``acceptance="greedy"`` reproduces the literal pseudocode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.objective import (evaluate, fcfs_schedule,
+                                  sorted_by_e2e_schedule)
+
+
+@dataclasses.dataclass
+class SAParams:
+    T0: float = 500.0
+    T_thres: float = 20.0
+    iters: int = 100          # iteration budget (see budget_mode)
+    tau: float = 0.95         # decay rate
+    acceptance: str = "metropolis"   # or "greedy" (paper pseudocode literal)
+    # "global": Algorithm 1 as printed — k is initialized once (line 5) and
+    # never reset, so ``iters`` bounds the TOTAL inner iterations across all
+    # temperature levels (one extra eval per level after exhaustion, as the
+    # repeat/until runs at least once).  This matches Table 1's near-constant
+    # sub-millisecond overhead.  "per_level": k resets each level —
+    # iters × n_levels evaluations (richer search, used for Fig. 8 sweeps).
+    budget_mode: str = "global"
+    # enabled move types (ablation studies): 0=squeeze, 1=delay, 2=swap
+    moves: tuple = (0, 1, 2)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SAResult:
+    perm: np.ndarray
+    batch_id: np.ndarray
+    G: float
+    evaluations: int
+    early_exit: bool
+    history: Optional[list] = None
+
+
+def _to_batches(perm, batch_id) -> List[List[int]]:
+    nb = int(batch_id[-1]) + 1 if len(perm) else 0
+    out = [[] for _ in range(nb)]
+    for p, b in zip(perm, batch_id):
+        out[b].append(int(p))
+    return out
+
+
+def _to_arrays(batches) -> Tuple[np.ndarray, np.ndarray]:
+    perm, bid = [], []
+    b_eff = 0
+    for batch in batches:
+        if not batch:
+            continue
+        perm.extend(batch)
+        bid.extend([b_eff] * len(batch))
+        b_eff += 1
+    return np.array(perm, np.int64), np.array(bid, np.int64)
+
+
+def _propose(batches: List[List[int]], max_batch: int,
+             rng: random.Random,
+             moves: tuple = (0, 1, 2)) -> Optional[List[List[int]]]:
+    """Generate a neighbour; None if the sampled move is invalid (no-op)."""
+    nb = len(batches)
+    op = rng.choice(moves)
+    new = [list(b) for b in batches]
+    if op == 0:        # squeezeLastIter: batch k -> k-1
+        k = rng.randrange(nb)
+        if k == 0 or len(new[k - 1]) >= max_batch or not new[k]:
+            return None
+        j = rng.randrange(len(new[k]))
+        new[k - 1].append(new[k].pop(j))
+    elif op == 1:      # delayNextIter: batch k -> k+1 (maybe new)
+        k = rng.randrange(nb)
+        if not new[k] or len(new[k]) == 1 and k == nb - 1:
+            return None
+        if k == nb - 1:
+            new.append([])
+        if len(new[k + 1]) >= max_batch:
+            return None
+        j = rng.randrange(len(new[k]))
+        new[k + 1].insert(0, new[k].pop(j))
+    else:              # randSwapping
+        flat = [(bi, i) for bi, b in enumerate(new) for i in range(len(b))]
+        if len(flat) < 2:
+            return None
+        (b1, i1), (b2, i2) = rng.sample(flat, 2)
+        new[b1][i1], new[b2][i2] = new[b2][i2], new[b1][i1]
+    return [b for b in new if b]
+
+
+def priority_mapping(arrays: dict, model: LinearLatencyModel,
+                     max_batch: int, params: SAParams = SAParams(),
+                     record_history: bool = False) -> SAResult:
+    """Algorithm 1.  arrays: columnar requests (slo.as_arrays)."""
+    n = len(arrays["input_len"])
+    rng = random.Random(params.seed)
+    evals = 0
+
+    # two starting solutions (lines 3, 12-15)
+    perm_s, bid_s = sorted_by_e2e_schedule(arrays, model, max_batch)
+    ev_s = evaluate(arrays, model, perm_s, bid_s)
+    evals += 1
+    if ev_s.n_met == n:                      # line 7 early exit
+        return SAResult(perm_s, bid_s, ev_s.G, evals, True,
+                        [] if record_history else None)
+    perm_0, bid_0 = fcfs_schedule(n, max_batch)
+    ev_0 = evaluate(arrays, model, perm_0, bid_0)
+    evals += 1
+    if ev_s.G >= ev_0.G:
+        batches, f = _to_batches(perm_s, bid_s), ev_s.G
+    else:
+        batches, f = _to_batches(perm_0, bid_0), ev_0.G
+
+    best_batches, best_f = batches, f
+    f_ref = max(f, 1e-12)
+    T = params.T0
+    history = [] if record_history else None
+    k = 0                                    # line 5 — NOT reset per level
+    while T >= params.T_thres:
+        if params.budget_mode == "per_level":
+            k = 0
+        level_iters = max(params.iters - k, 1)   # repeat..until runs >= once
+        for _ in range(level_iters):
+            k += 1
+            cand = _propose(batches, max_batch, rng, params.moves)
+            if cand is None:
+                continue
+            perm_c, bid_c = _to_arrays(cand)
+            f_new = evaluate(arrays, model, perm_c, bid_c).G
+            evals += 1
+            accept = f_new > f
+            if not accept and params.acceptance == "metropolis":
+                p = math.exp((f_new - f) / (f_ref * T / params.T0))
+                accept = rng.random() < p
+            if accept:
+                batches, f = cand, f_new
+                if f > best_f:
+                    best_batches, best_f = batches, f
+        if history is not None:
+            history.append((T, f, best_f))
+        T *= params.tau
+    perm_b, bid_b = _to_arrays(best_batches)
+    return SAResult(perm_b, bid_b, best_f, evals, False, history)

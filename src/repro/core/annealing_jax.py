@@ -1,0 +1,181 @@
+"""Jittable simulated-annealing priority mapper (beyond-paper).
+
+The paper runs Algorithm 1 in Python on the host.  Here the whole anneal is
+a single ``jax.lax`` program: the schedule lives in fixed-shape arrays, the
+objective G is evaluated with segment ops, the temperature loop is a
+``lax.while_loop`` and per-temperature iterations a ``lax.fori_loop``.
+``vmap`` over PRNG keys yields independent tempering chains whose best
+solution is taken — on TPU hosts this amortizes scheduler overhead across
+chains and keeps it off the Python critical path.
+
+Schedule representation (fixed N):
+  perm [N] int32  — request index per priority position
+  bnd  [N] bool   — batch boundary *before* each position (bnd[0] = True)
+
+Moves mirror Algorithm 1: shift a boundary right (squeeze into previous
+iteration), shift left / open a new one (delay into next iteration), swap
+two positions.  Proposals violating the max-batch constraint are no-ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxSAConfig:
+    T0: float = 500.0
+    T_thres: float = 20.0
+    iters: int = 100
+    tau: float = 0.95
+    num_chains: int = 8
+
+
+def _eval_g(li, lo, h, slo_e2e, slo_ttft, slo_tpot, coefs, perm, bnd):
+    """Vectorized Eq. 2 objective. coefs: [8] latency-model params."""
+    ap, bp, gp, dp, ad, bd, gd, dd = [coefs[i] for i in range(8)]
+    n = li.shape[0]
+    li, lo = li[perm], lo[perm]
+    h = h[perm]
+    s_e, s_t, s_p = slo_e2e[perm], slo_ttft[perm], slo_tpot[perm]
+
+    batch_id = jnp.cumsum(bnd.astype(jnp.int32)) - 1          # [N]
+    bsz = jnp.bincount(batch_id, length=n).astype(li.dtype)
+    b_of = bsz[batch_id]
+
+    t_pref = ap * b_of * li + bp * b_of + gp * li + dp
+    tri = li * lo + lo * (lo + 1) / 2.0
+    t_dec = (ad * b_of + gd) * tri + (bd * b_of + dd) * lo
+    t_exec = t_pref + t_dec
+    t_tpot = t_dec / jnp.maximum(lo, 1.0)
+
+    bdur = jax.ops.segment_max(t_exec, batch_id, num_segments=n)
+    bdur = jnp.where(bsz > 0, bdur, 0.0)
+    wait_b = jnp.concatenate([jnp.zeros((1,), bdur.dtype),
+                              jnp.cumsum(bdur)[:-1]])
+    t_wait = wait_b[batch_id]
+    e2e = t_exec + t_wait
+    ttft = t_pref + t_wait
+    met = jnp.where(h == 1, e2e <= s_e, (ttft <= s_t) & (t_tpot <= s_p))
+    return jnp.sum(met) / jnp.maximum(jnp.sum(e2e), 1e-12)
+
+
+def _propose(key, perm, bnd, max_batch):
+    n = perm.shape[0]
+    kop, k1, k2 = jax.random.split(key, 3)
+    op = jax.random.randint(kop, (), 0, 3)
+    i = jax.random.randint(k1, (), 1, n)          # position 1..n-1
+    j = jax.random.randint(k2, (), 0, n)
+
+    def sizes_ok(b):
+        bid = jnp.cumsum(b.astype(jnp.int32)) - 1
+        return jnp.all(jnp.bincount(bid, length=n) <= max_batch)
+
+    def do_squeeze(_):
+        # clear boundary at i, set at i+1 (if any): first elem of the batch
+        # starting at i joins the previous iteration.
+        valid = bnd[i]
+        nb = bnd.at[i].set(False)
+        nb = jax.lax.cond(i + 1 < n,
+                          lambda b: b.at[jnp.minimum(i + 1, n - 1)].set(True),
+                          lambda b: b, nb)
+        ok = valid & sizes_ok(nb)
+        return perm, jnp.where(ok, nb, bnd)
+
+    def do_delay(_):
+        # set boundary at i where none exists: the tail of the current batch
+        # becomes / joins the next iteration.
+        valid = ~bnd[i]
+        nb = bnd.at[i].set(True)
+        ok = valid & sizes_ok(nb)
+        return perm, jnp.where(ok, nb, bnd)
+
+    def do_swap(_):
+        pi, pj = perm[i], perm[j]
+        np_ = perm.at[i].set(pj).at[j].set(pi)
+        return np_, bnd
+
+    return jax.lax.switch(op, [do_squeeze, do_delay, do_swap], None)
+
+
+@partial(jax.jit, static_argnames=("max_batch", "cfg"))
+def anneal_chain(key, arrays, coefs, max_batch: int, cfg: JaxSAConfig):
+    """One SA chain. arrays: tuple (li, lo, h, slo_e2e, slo_ttft, slo_tpot)."""
+    li, lo, h, s_e, s_t, s_p = arrays
+    n = li.shape[0]
+    ev = partial(_eval_g, li, lo, h, s_e, s_t, s_p, coefs)
+
+    # start 1: sorted by predicted e2e at max batch size
+    t0 = (coefs[0] * max_batch * li + coefs[1] * max_batch + coefs[2] * li
+          + coefs[3])
+    tri = li * lo + lo * (lo + 1) / 2.0
+    t0 = t0 + (coefs[4] * max_batch + coefs[6]) * tri \
+        + (coefs[5] * max_batch + coefs[7]) * lo
+    perm_s = jnp.argsort(t0).astype(jnp.int32)
+    bnd0 = (jnp.arange(n) % max_batch) == 0
+    f_s = ev(perm_s, bnd0)
+    # start 2: arrival order
+    perm_a = jnp.arange(n, dtype=jnp.int32)
+    f_a = ev(perm_a, bnd0)
+    perm = jnp.where(f_s >= f_a, perm_s, perm_a)
+    f = jnp.maximum(f_s, f_a)
+    f_ref = jnp.maximum(f, 1e-12)
+
+    def temp_cond(state):
+        T = state[0]
+        return T >= cfg.T_thres
+
+    def temp_body(state):
+        T, key, perm, bnd, f, best_perm, best_bnd, best_f = state
+
+        def it_body(_, inner):
+            key, perm, bnd, f, bp, bb, bf = inner
+            key, kp, ka = jax.random.split(key, 3)
+            perm_c, bnd_c = _propose(kp, perm, bnd, max_batch)
+            f_new = ev(perm_c, bnd_c)
+            p_acc = jnp.exp((f_new - f) / (f_ref * T / cfg.T0))
+            accept = (f_new > f) | (jax.random.uniform(ka) < p_acc)
+            perm = jnp.where(accept, perm_c, perm)
+            bnd = jnp.where(accept, bnd_c, bnd)
+            f = jnp.where(accept, f_new, f)
+            better = f > bf
+            bp = jnp.where(better, perm, bp)
+            bb = jnp.where(better, bnd, bb)
+            bf = jnp.where(better, f, bf)
+            return key, perm, bnd, f, bp, bb, bf
+
+        key, perm, bnd, f, best_perm, best_bnd, best_f = jax.lax.fori_loop(
+            0, cfg.iters, it_body,
+            (key, perm, bnd, f, best_perm, best_bnd, best_f))
+        return (T * cfg.tau, key, perm, bnd, f,
+                best_perm, best_bnd, best_f)
+
+    state = (jnp.float64(cfg.T0) if jax.config.read("jax_enable_x64")
+             else jnp.float32(cfg.T0),
+             key, perm, bnd0, f, perm, bnd0, f)
+    state = jax.lax.while_loop(temp_cond, temp_body, state)
+    _, _, _, _, _, best_perm, best_bnd, best_f = state
+    return best_perm, best_bnd, best_f
+
+
+def priority_mapping_jax(arrays_np: dict, model, max_batch: int,
+                         cfg: JaxSAConfig = JaxSAConfig(), seed: int = 0):
+    """vmapped parallel-tempering front end. Returns (perm, batch_id, G)."""
+    arrs = tuple(jnp.asarray(arrays_np[k], jnp.float32) for k in
+                 ("input_len", "output_len"))
+    arrs += (jnp.asarray(arrays_np["h"], jnp.int32),)
+    arrs += tuple(jnp.asarray(arrays_np[k], jnp.float32) for k in
+                  ("slo_e2e", "slo_ttft", "slo_tpot"))
+    coefs = jnp.asarray(model.as_tuple(), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), cfg.num_chains)
+    perms, bnds, fs = jax.vmap(
+        lambda k: anneal_chain(k, arrs, coefs, max_batch, cfg))(keys)
+    best = int(jnp.argmax(fs))
+    perm = np.asarray(perms[best])
+    bnd = np.asarray(bnds[best])
+    batch_id = np.cumsum(bnd.astype(np.int64)) - 1
+    return perm.astype(np.int64), batch_id, float(fs[best])

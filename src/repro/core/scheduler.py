@@ -1,0 +1,141 @@
+"""Algorithm 2 — SLO-aware multi-instance scheduling.
+
+Flow (paper §4.4): predict request latencies → assign requests to instances
+round-robin by largest remaining memory (Eq. 20 token accounting) →
+per-instance priority mapping (Algorithm 1, embarrassingly parallel) →
+enqueue → dispatch batches as instances become ready.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.annealing import SAParams, SAResult, priority_mapping
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.objective import evaluate
+from repro.core.profiler import MemoryModel, OutputLengthPredictor
+from repro.core.slo import Request, as_arrays
+
+
+@dataclasses.dataclass
+class InstanceQueue:
+    """A priority-ordered queue of planned batches for one LLM instance."""
+    instance_id: int
+    batches: List[List[Request]] = dataclasses.field(default_factory=list)
+
+    def pop_next_batch(self) -> Optional[List[Request]]:
+        return self.batches.pop(0) if self.batches else None
+
+    def __len__(self):
+        return sum(len(b) for b in self.batches)
+
+
+@dataclasses.dataclass
+class ScheduleOutcome:
+    queues: List[InstanceQueue]
+    predicted_G: float
+    sa_results: List[SAResult]
+    assignment: Dict[int, int]     # req_id -> instance
+
+
+class SLOAwareScheduler:
+    """The decoupled scheduler component.
+
+    Parameters
+    ----------
+    model : fitted latency predictor (per instance type)
+    num_instances : number of LLM serving instances
+    max_batch : maximum batch size the service allows
+    memory : Eq. 20 memory model (per instance)
+    output_predictor : fills Request.predicted_output_len when missing
+    mapper : priority-mapping implementation; defaults to the Python
+             simulated annealer (Algorithm 1). ``use_jax=True`` switches to
+             the jitted parallel-tempering annealer.
+    """
+
+    def __init__(self, model: LinearLatencyModel, num_instances: int = 1,
+                 max_batch: int = 8,
+                 memory: Optional[MemoryModel] = None,
+                 output_predictor: Optional[OutputLengthPredictor] = None,
+                 sa_params: SAParams = SAParams(),
+                 use_jax: bool = False):
+        self.model = model
+        self.num_instances = num_instances
+        self.max_batch = max_batch
+        self.memory = memory or MemoryModel(total_memory=float("inf"),
+                                            mu=0.9, sigma_per_token=1.0)
+        self.output_predictor = output_predictor
+        self.sa_params = sa_params
+        self.use_jax = use_jax
+
+    # ------------------------------------------------ instance assignment
+    def assign_instances(self, requests: Sequence[Request]
+                         ) -> List[List[Request]]:
+        """Round-robin to the instance with the largest remaining memory;
+        reset when the fullest instance cannot take the next request."""
+        remaining = [self.memory.total] * self.num_instances
+        buckets: List[List[Request]] = [[] for _ in range(self.num_instances)]
+        for req in requests:
+            need = self.memory.tokens_to_memory(
+                req.input_len + req.planning_output_len())
+            tgt = int(np.argmax(remaining))
+            if remaining[tgt] < need:
+                # a maximal wave has been assigned; start a fresh iteration
+                remaining = [self.memory.total] * self.num_instances
+                tgt = int(np.argmax(remaining))
+            remaining[tgt] -= need
+            buckets[tgt].append(req)
+        return buckets
+
+    # ------------------------------------------------ main entry
+    def schedule(self, requests: Sequence[Request]) -> ScheduleOutcome:
+        requests = list(requests)
+        for r in requests:
+            if r.predicted_output_len is None:
+                if self.output_predictor is not None:
+                    r.predicted_output_len = self.output_predictor.predict(
+                        r.task_type)
+                elif r.output_len is not None:
+                    r.predicted_output_len = r.output_len
+        buckets = self.assign_instances(requests)
+        queues, sa_results = [], []
+        assignment = {}
+        g_num, g_den = 0.0, 0.0
+        for inst, bucket in enumerate(buckets):
+            q = InstanceQueue(inst)
+            if bucket:
+                arrays = as_arrays(bucket)
+                if self.use_jax:
+                    from repro.core.annealing_jax import (JaxSAConfig,
+                                                          priority_mapping_jax)
+                    perm, bid, g = priority_mapping_jax(
+                        arrays, self.model, self.max_batch,
+                        JaxSAConfig(T0=self.sa_params.T0,
+                                    T_thres=self.sa_params.T_thres,
+                                    iters=self.sa_params.iters,
+                                    tau=self.sa_params.tau),
+                        seed=self.sa_params.seed)
+                    res = SAResult(perm, bid, g, -1, False)
+                else:
+                    res = priority_mapping(arrays, self.model,
+                                           self.max_batch, self.sa_params)
+                sa_results.append(res)
+                ev = evaluate(arrays, self.model, res.perm, res.batch_id)
+                g_num += ev.n_met
+                g_den += ev.total_latency
+                nb = int(res.batch_id[-1]) + 1
+                for b in range(nb):
+                    members = [bucket[i] for i, bi in
+                               zip(res.perm, res.batch_id) if bi == b]
+                    q.batches.append(members)
+                for r in bucket:
+                    assignment[r.req_id] = inst
+            queues.append(q)
+        return ScheduleOutcome(
+            queues=queues,
+            predicted_G=g_num / g_den if g_den else 0.0,
+            sa_results=sa_results,
+            assignment=assignment,
+        )

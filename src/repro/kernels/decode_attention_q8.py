@@ -1,0 +1,107 @@
+"""Flash-decode over an int8-quantized KV cache — Pallas TPU kernel.
+
+Same online-softmax structure as ``decode_attention``, but K/V blocks are
+int8 with per-(token, head) bf16 scales: blocks are dequantized in VMEM
+right before the MXU contractions, so HBM traffic is halved (1 byte + 1/64
+scale per element) while the math stays bf16/f32.  This is the kernel-level
+counterpart of the ``init_cache(quantized=True)`` serving mode (§Perf
+iteration 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(n_valid_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, block_k, num_kb):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    n_valid = n_valid_ref[bi]
+    k_start = ki * block_k
+
+    @pl.when(k_start < n_valid)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale      # [g, hd]
+        # dequantize int8 blocks in VMEM
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * \
+            ks_ref[0, :, 0, :].astype(jnp.float32)             # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * \
+            vs_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [g, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < n_valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_q8(q, k_cache, k_scale, v_cache, v_scale, n_valid, *,
+                        block_k: int = 256, interpret: bool = False):
+    """q: [B,H,hd] bf16/f32; k/v_cache: [B,L,KV,hd] int8;
+    k/v_scale: [B,L,KV,1] bf16; n_valid: [B] int32 -> [B,H,hd]."""
+    b, h, hd = q.shape
+    L, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    block_k = min(block_k, L)
+    assert L % block_k == 0
+    num_kb = L // block_k
+    scale = hd ** -0.5
+    qg = q.reshape(b, kv, g, hd)
+
+    grid = (b, kv, num_kb)
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               num_kb=num_kb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd),
+                             lambda bi, hi, ki, nv: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda bi, hi, ki, nv: (bi, ki, hi, 0)),
+                pl.BlockSpec((1, block_k, 1, 1),
+                             lambda bi, hi, ki, nv: (bi, ki, hi, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda bi, hi, ki, nv: (bi, ki, hi, 0)),
+                pl.BlockSpec((1, block_k, 1, 1),
+                             lambda bi, hi, ki, nv: (bi, ki, hi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda bi, hi, ki, nv: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(n_valid, qg, k_cache, k_scale, v_cache, v_scale)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,123 @@
+"""Prefill flash attention — Pallas TPU kernel.
+
+Online-softmax flash attention with causal and sliding-window masking and
+GQA (q-head → kv-head mapping via BlockSpec index maps; no materialized
+head repetition).
+
+TPU adaptation (vs the CUDA flash-attention formulation):
+  * tiles live in VMEM; ``block_q × head_dim`` and ``block_k × head_dim``
+    are chosen as multiples of the 128-lane MXU tiling;
+  * the k-loop is the innermost *sequential* grid dimension, carrying the
+    running max / denominator / accumulator in VMEM scratch across grid
+    steps (TPU grids iterate sequentially, so cross-step scratch is sound —
+    the idiom replaces CUDA's in-kernel loop + shared memory);
+  * fully-masked key blocks are skipped with ``pl.when`` (the causal /
+    window structure is known from block indices alone).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, seq_len, causal, window, num_kb):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # does this (q_block, k_block) pair contain any unmasked entry?
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        # newest q position is q_start+block_q-1; oldest allowed key is
+        # q_start - window + 1; block dead if its last key is older.
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              > q_start - window) if window else run
+
+    @pl.when(run if isinstance(run, jax.Array) else bool(run))
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # [bq, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B,S,H,hd]; k,v: [B,S,KV,hd]. Returns [B,S,H,hd]."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    num_qb = s // block_q
+    num_kb = s // block_k
+    scale = hd ** -0.5
+
+    grid = (b, h, num_qb, num_kb)
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=s, causal=causal, window=window, num_kb=num_kb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

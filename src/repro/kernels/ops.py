@@ -1,0 +1,57 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
+(this container) they run in ``interpret=True`` mode or fall back to the
+pure-jnp reference — selectable via ``set_kernel_mode``.  The model code
+calls these wrappers so swapping implementations never touches call sites.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+Mode = Literal["auto", "pallas", "interpret", "ref"]
+_MODE: Mode = "auto"
+
+
+def set_kernel_mode(mode: Mode):
+    global _MODE
+    _MODE = mode
+
+
+def _resolved() -> str:
+    if _MODE != "auto":
+        return _MODE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=(mode == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, block_k=256):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, n_valid)
+    return _decode_pallas(q, k_cache, v_cache, n_valid, block_k=block_k,
+                          interpret=(mode == "interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=64):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.ssd_ref(x, dt, A, B, C, chunk=chunk)
+    return _ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                       interpret=(mode == "interpret"))

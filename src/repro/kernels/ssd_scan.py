@@ -1,0 +1,107 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+The SSD duality splits the scan into a quadratic intra-chunk part (an
+attention-like [q, q] matmul that feeds the MXU) and a linear inter-chunk
+state recurrence.  The kernel iterates chunks as the innermost sequential
+grid dimension, carrying the [hd, ds] recurrent state in VMEM scratch —
+the TPU analogue of the Triton chunk kernel's cross-CTA state passing
+(which has no direct equivalent: TPU grids are sequential, so the carry is
+simply scratch that survives grid steps).
+
+Grid: (batch, heads, num_chunks).  Per step, tiles in VMEM:
+  x  [q, hd], dt [q], B/C [q, ds], state [hd, ds] (f32 scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref, st_scr,
+            *, chunk, num_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # [q, hd]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # [q]
+    A = a_ref[0]                                   # scalar (negative)
+    Bm = b_ref[0, :, :].astype(jnp.float32)        # [q, ds]
+    Cm = c_ref[0, :, :].astype(jnp.float32)        # [q, ds]
+
+    dA = dt * A                                    # [q]
+    cum = jnp.cumsum(dA)                           # [q] log-decay within chunk
+
+    # ----- intra-chunk quadratic part (MXU matmuls)
+    li = cum[:, None]
+    lj = cum[None, :]
+    iot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = jot <= iot
+    L = jnp.exp(jnp.where(tril, li - lj, -1e30))   # [q, q]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # [q, q]
+    att = cb * L
+    xdt = x * dt[:, None]                          # [q, hd]
+    y_intra = jax.lax.dot_general(att, xdt, (((1,), (0,)), ((), ())))
+
+    # ----- inter-chunk contribution from the carried state
+    state = st_scr[...]                            # [hd, ds]
+    in_decay = jnp.exp(cum)[:, None]               # [q, 1]
+    y_inter = jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ()))) * in_decay   # [q, hd]
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ----- state update: S <- decay_chunk * S + sum_j d2e_j dt_j x_j B_j^T
+    decay_to_end = jnp.exp(cum[-1] - cum)          # [q]
+    w = (decay_to_end * dt)[:, None] * x           # [q, hd]
+    upd = jax.lax.dot_general(w, Bm, (((0,), (0,)), ((), ())))  # [hd, ds]
+    chunk_decay = jnp.exp(jnp.sum(dA))
+    st_scr[...] = state * chunk_decay + upd
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit():
+        st_out_ref[0, 0, :, :] = st_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = False):
+    """x: [b,s,nh,hd]; dt: [b,s,nh] (post-softplus); A: [nh] negative;
+    B, C: [b,s,ds].  Returns (y [b,s,nh,hd], final_state [b,nh,hd,ds]).
+    """
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (b, nh, nc)
+
+    kernel = functools.partial(_kernel, chunk=chunk, num_chunks=nc)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, ds), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C)
+    return y, final

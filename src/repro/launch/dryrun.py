@@ -1,0 +1,315 @@
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh).
+
+MUST set the host-device override before ANY other import — jax locks the
+device count on first initialization.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED, get_config  # noqa: E402
+from repro.distributed.sharding import (ParallelismConfig, cache_specs,  # noqa: E402
+                                        make_ctx, param_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.cache import init_cache  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.models.model import forward_decode, forward_full, init_params  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train.train_step import train_step  # noqa: E402
+
+# StreamingLLM-style window used for full-attention archs at 500k decode
+STREAM_WINDOW = 8192
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+# --------------------------------------------------------------- inputs
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    out = {}
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.uses_extra_embeds:
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+            out["positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+        elif cfg.num_codebooks:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if sh["kind"] == "train":
+            if cfg.num_codebooks:
+                out["labels"] = jax.ShapeDtypeStruct(
+                    (b, s, cfg.num_codebooks), i32)
+            else:
+                out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode
+        if cfg.uses_extra_embeds:
+            out["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), bf16)
+            out["positions"] = jax.ShapeDtypeStruct((b, 1, 3), i32)
+        elif cfg.num_codebooks:
+            out["tokens"] = jax.ShapeDtypeStruct((b, 1, cfg.num_codebooks), i32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    return out
+
+
+def decode_window(cfg: ModelConfig, shape_name: str) -> int:
+    if shape_name == "long_500k" and not cfg.sliding_window \
+            and cfg.family not in ("ssm",):
+        return STREAM_WINDOW     # windowed-KV serving mode (DESIGN.md §4)
+    return 0
+
+
+def cache_struct(cfg, shape_name, kv_quant: bool = False):
+    sh = SHAPES[shape_name]
+    window = decode_window(cfg, shape_name)
+    return jax.eval_shape(partial(init_cache, cfg, sh["batch"], sh["seq"],
+                                  window=window, quantized=kv_quant))
+
+
+# --------------------------------------------------------------- steps
+def build_step(cfg: ModelConfig, shape_name: str, mesh, par,
+               kv_quant: bool = False):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    sh = SHAPES[shape_name]
+    ctx = make_ctx(mesh, par)
+    params_sds = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_specs(params_sds, cfg, mesh, par)
+    psh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    ins = input_specs(cfg, shape_name)
+    dp = par.dp_axes
+    bspec = dp if sh["batch"] % _axes_size(mesh, dp) == 0 else None
+
+    def in_shard(name, sds):
+        extra = (None,) * (len(sds.shape) - 1)
+        return NamedSharding(mesh, P(bspec, *extra))
+
+    in_sh = {k: in_shard(k, v) for k, v in ins.items()}
+
+    if sh["kind"] == "train":
+        ocfg = opt.AdamWConfig()
+        ostate_sds = jax.eval_shape(opt.init, params_sds)
+        osh = jax.tree.map(
+            lambda _: None, ostate_sds)
+        # optimizer state mirrors param sharding (mu/nu same shapes)
+        osh = opt.AdamWState(step=NamedSharding(mesh, P()),
+                             mu=psh, nu=psh)
+
+        def fn(params, opt_state, batch):
+            return train_step(cfg, ocfg, params, opt_state, batch, ctx=ctx,
+                              remat=True)
+
+        args = (params_sds, ostate_sds, ins)
+        in_shardings = (psh, osh, in_sh)
+        out_shardings = (psh, osh, None)
+        return fn, args, in_shardings, out_shardings
+
+    if sh["kind"] == "prefill":
+        csds = cache_struct(cfg, shape_name, kv_quant)
+        cspecs = cache_specs(csds, cfg, mesh, par, sh["batch"])
+        csh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+        def fn(params, cache, batch):
+            logits, cache, _ = forward_full(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), positions=batch.get("positions"),
+                cache=cache, ctx=ctx, last_only=True)
+            return logits, cache
+
+        args = (params_sds, csds, ins)
+        return fn, args, (psh, csh, in_sh), (None, csh)
+
+    # decode
+    csds = cache_struct(cfg, shape_name, kv_quant)
+    cspecs = cache_specs(csds, cfg, mesh, par, sh["batch"])
+    csh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    def fn(params, cache, batch):
+        logits, cache = forward_decode(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), positions=batch.get("positions"),
+            cache=cache, ctx=ctx)
+        return logits, cache
+
+    args = (params_sds, csds, ins)
+    return fn, args, (psh, csh, in_sh), (None, csh)
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+# --------------------------------------------------------------- analysis
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved through each collective kind (output-shape
+    proxy), parsed from the post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match the op name: `= TYPE[...] all-gather(` or `-start(`
+            if re.search(rf"\s{kind}(-start)?\(", stripped):
+                lhs = stripped.split("=")[0] + "=" + \
+                    stripped.split("=", 1)[1].split(kind)[0]
+                nbytes = 0
+                for m in _SHAPE_RE.finditer(lhs):
+                    dims = m.group(2)
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    nbytes += n * _BYTES[m.group(1)]
+                out[kind] += nbytes
+                counts[kind] += 1
+                break
+    return out, counts
+
+
+def analyze(compiled, lowered_text=None):
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, counts = collective_bytes(hlo)
+    return {
+        "flops_per_device": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0)
+        if cost else 0.0,
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        "collective_bytes_per_device": coll,
+        "collective_counts": counts,
+    }
+
+
+# --------------------------------------------------------------- driver
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            par: ParallelismConfig = None, save: bool = True,
+            verbose: bool = True, optimized: bool = False,
+            out_dir: str = None):
+    """optimized=True enables the §Perf winners: sequence-parallel
+    attention constraints + (2D) expert-parallel MoE."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if par is None:
+        # FSDP for training (params+optimizer sharded everywhere).
+        # Serving keeps weights tp-resident (no per-step weight gathers)
+        # unless the tp-sharded weights alone would not fit HBM (dbrx).
+        tp_resident_gb = cfg.param_count() * 2 / 16 / 2**30
+        par = ParallelismConfig(
+            dp_axes=("pod", "data") if multi_pod else ("data",),
+            fsdp=(SHAPES[shape_name]["kind"] == "train"
+                  or tp_resident_gb > 8.0),
+            expert_parallel=optimized,
+            attn_sharding="auto" if optimized else "none")
+    fn, args, in_sh, out_sh = build_step(cfg, shape_name, mesh, par)
+    t0 = time.time()
+    # NamedShardings carry the mesh; shard_map sites receive it via ctx.
+    lowered = jax.jit(fn, in_shardings=in_sh,
+                      out_shardings=out_sh).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    rec = analyze(compiled)
+    rec.update(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               param_count=cfg.param_count(),
+               active_param_count=cfg.active_param_count())
+    if verbose:
+        mem_gb = rec["peak_bytes"] / 2**30
+        arg_gb = rec["argument_bytes"] / 2**30
+        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+              f"compile {t_compile:.1f}s, peak {mem_gb:.2f} GiB/dev, "
+              f"args {arg_gb:.2f} GiB/dev, "
+              f"flops/dev {rec['flops_per_device']:.3g}")
+        print("  memory_analysis:", compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print("  cost_analysis: flops=%.4g bytes=%.4g" % (
+            ca.get("flops", 0), ca.get("bytes accessed", 0)))
+        print("  collectives:", {k: f"{v/2**20:.1f}MiB"
+                                 for k, v in
+                                 rec["collective_bytes_per_device"].items()
+                                 if v})
+    if save:
+        d = out_dir or RESULTS_DIR
+        os.makedirs(d, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}".replace("/", "-")
+        with open(os.path.join(d, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None,
+                    help="input-shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="enable §Perf winners (seq-par attn, EP MoE)")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+    archs = ASSIGNED if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, optimized=args.optimized,
+                            out_dir=args.out_dir)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)[:200]))
+                    print(f"[dryrun] FAIL {arch} × {shape} mp={mp}: {e}")
+    if failures:
+        print(f"{len(failures)} FAILURES")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("dry-run: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing this module never
+touches jax device state.  Target hardware: TPU v5e pods — 256 chips/pod,
+(16, 16) per pod, 2 pods = 512 chips for the multi-pod mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh over the single local device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

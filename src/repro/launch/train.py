@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Local run (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 20 --batch 8 --seq 128
+
+Production mesh dry-run of the full config (no allocation):
+  handled by repro.launch.dryrun (train_4k shape).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data.synthetic import token_stream
+from repro.models import init_params
+from repro.train import optimizer as opt
+from repro.train.train_step import train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced variant (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None, help="checkpoint path prefix")
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--resume", default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1))
+    state = opt.init(params)
+    start = 0
+    if args.resume:
+        from repro.train.checkpoint import restore
+        params, state, start = restore(args.resume, params, state)
+        print(f"resumed from {args.resume} at step {start}")
+    step_fn = jax.jit(lambda p, s, b: train_step(cfg, ocfg, p, s, b))
+
+    rng = np.random.default_rng(0)
+    kw_embeds = cfg.uses_extra_embeds
+    nc = cfg.num_codebooks
+    t0 = time.time()
+    for step in range(args.steps):
+        if kw_embeds:
+            batch = {
+                "embeds": jnp.asarray(rng.normal(
+                    0, 1, (args.batch, args.seq, cfg.d_model)), jnp.float32),
+                "labels": jnp.asarray(rng.integers(
+                    0, cfg.vocab_size, (args.batch, args.seq)), jnp.int32),
+            }
+        elif nc:
+            toks = rng.integers(0, cfg.vocab_size,
+                                (args.batch, args.seq, nc))
+            batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                     "labels": jnp.asarray(toks, jnp.int32)}
+        else:
+            toks = token_stream(args.seq, cfg.vocab_size, seed=step,
+                                batch=args.batch)
+            batch = {"tokens": jnp.asarray(toks),
+                     "labels": jnp.asarray(toks)}
+        params, state, metrics = step_fn(params, state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"({(time.time() - t0) / (step + 1):.2f}s/step)")
+        if args.ckpt and (step + 1) % args.save_every == 0:
+            from repro.train.checkpoint import save
+            save(args.ckpt, params, state, step=start + step + 1,
+                 meta={"arch": cfg.name})
+
+
+if __name__ == "__main__":
+    main()

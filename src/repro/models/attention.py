@@ -1,0 +1,390 @@
+"""Attention blocks: GQA (RoPE / M-RoPE, qk-norm, sliding window) and MLA.
+
+Two execution paths per block:
+  * ``full``  — prefill / train over a whole sequence with a causal
+    (optionally sliding-window) mask; optionally writes a KV cache.
+  * ``decode`` — a single new token attending to a cache.
+
+MLA (DeepSeek-V2) uses the compressed-KV cache with the *absorbed* decode
+formulation: scores are computed directly against the latent cache, so the
+per-token decode cost is O(L · (kv_lora + rope_dim)) instead of
+O(L · heads · head_dim).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm, rope_cos_sin
+
+NEG_INF = -1e30
+
+
+def _constrain(x, ctx, *spec):
+    """with_sharding_constraint when a mesh ctx is present (no-op otherwise)."""
+    if ctx is None or getattr(ctx, "mesh", None) is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+_USE_KERNELS = False
+
+
+def set_attention_kernels(enabled: bool):
+    """Route full-sequence attention through the Pallas flash kernel
+    (compiled on TPU; interpret/ref on CPU via kernels.ops mode)."""
+    global _USE_KERNELS
+    _USE_KERNELS = enabled
+
+
+def _use_attn_kernel(cfg, s: int) -> bool:
+    if not _USE_KERNELS or cfg.attn_logit_softcap:
+        return False
+    return s >= 16 and s % 16 == 0
+
+
+def _seq_parallel_wanted(cfg, ctx, s: int) -> bool:
+    if ctx is None or getattr(ctx, "mesh", None) is None:
+        return False
+    if getattr(ctx, "attn_sharding", "none") != "auto" or s <= 1:
+        return False
+    return s % ctx.mesh.shape[ctx.tp_axis] == 0
+
+
+# =================================================================== GQA
+def init_gqa(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _expand_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B,S,kv,hd] -> [B,S,kv*n_rep,hd]."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                            ).reshape(b, s, kv * n_rep, hd)
+
+
+def _causal_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    """[q_len, kv_len] bool; True = attend. q position i sits at q_offset+i."""
+    qpos = q_offset + jnp.arange(q_len)[:, None]
+    kpos = jnp.arange(kv_len)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def gqa_full(params, cfg, x, positions, *, cache_len: int = 0, ctx=None):
+    """Full-sequence attention.
+
+    x: [B, S, D]; positions: [B, S] (or [B, S, 3] for M-RoPE).
+    Returns (out [B,S,D], (k, v) [B,S,kv,hd] for cache writing).
+
+    With ``ctx.attn_sharding == "auto"``, sequence-parallel constraints are
+    applied: q (and the scores' q dim) shard over the tp axis while k/v are
+    replicated within the tp group — correct for ANY head count, unlike
+    head sharding which needs h % tp == 0 (§Perf: fixes the giant score
+    all-reduces GSPMD emits for h=24/28 archs).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, s, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, s, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    seq_par = _seq_parallel_wanted(cfg, ctx, s)
+    if seq_par:
+        tp = ctx.tp_axis
+        dpb = ctx.dp_axes if b % _axes_prod(ctx) == 0 else None
+        q = _constrain(q, ctx, dpb, tp, None, None)
+        k = _constrain(k, ctx, dpb, None, None, None)
+        v = _constrain(v, ctx, dpb, None, None, None)
+    if not seq_par and _use_attn_kernel(cfg, s):
+        # Pallas flash-attention path (TPU compiled / CPU interpret)
+        from repro.kernels import ops
+        out = ops.flash_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window)
+        out = out.reshape(b, s, h * hd)
+        return jnp.dot(out, params["wo"]), (k, v)
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, hd)
+    mask = _causal_mask(s, s, 0, cfg.sliding_window)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k) \
+        / jnp.sqrt(hd).astype(x.dtype)
+    if seq_par:
+        scores = _constrain(scores, ctx, dpb, None, None, ctx.tp_axis, None)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v).reshape(b, s, h * hd)
+    if seq_par:
+        out = _constrain(out, ctx, dpb, ctx.tp_axis, None)
+    return jnp.dot(out, params["wo"]), (k, v)
+
+
+def _axes_prod(ctx) -> int:
+    n = 1
+    for a in ctx.dp_axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _ring_token_write(cache, val, widx):
+    return jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i,) + (0,) * (c.ndim - 1)))(cache, val.astype(cache.dtype),
+                                           widx)
+
+
+def gqa_decode(params, cfg, x, positions, k_cache, v_cache, cache_pos,
+               k_scale=None, v_scale=None):
+    """One-token decode against a cache.
+
+    x: [B, 1, D]; k_cache/v_cache: [B, L, kv, hd]; cache_pos: [B] int32 —
+    number of valid tokens already in the cache.  Returns
+    (out [B,1,D], new cache entries dict).
+    For sliding-window configs the cache is a ring buffer of length
+    min(L, window) and positions wrap.  With int8 caches (k_scale given)
+    the new token is quantized per (token, head) and the cache is
+    dequantized inside the score/value contractions (fused on TPU).
+    """
+    from repro.models.cache import dequantize_kv, quantize_kv
+    b, s, d = x.shape
+    assert s == 1
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = k_cache.shape[1]
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, 1, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # ring-buffer write index
+    widx = jnp.mod(cache_pos, L)  # [B]
+    quant = k_scale is not None
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache = _ring_token_write(k_cache, kq, widx)
+        v_cache = _ring_token_write(v_cache, vq, widx)
+        k_scale = _ring_token_write(k_scale, ks, widx)
+        v_scale = _ring_token_write(v_scale, vs, widx)
+        k_eff = dequantize_kv(k_cache, k_scale)
+        v_eff = dequantize_kv(v_cache, v_scale)
+    else:
+        k_cache = _ring_token_write(k_cache, k, widx)
+        v_cache = _ring_token_write(v_cache, v, widx)
+        k_eff, v_eff = k_cache, v_cache
+    n_valid = jnp.minimum(cache_pos + 1, L)  # [B]
+    # grouped-GQA form: never materialize the head-expanded cache — the
+    # cache keeps its (possibly sequence-sharded) layout and the partitioner
+    # reduces over the sharded L dim with small collectives.
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, hd)  # [B,kv,rep,hd]
+    scores = jnp.einsum("bgrd,blgd->bgrl", qg,
+                        k_eff.astype(qg.dtype)) \
+        / jnp.sqrt(hd).astype(x.dtype)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]  # [B, L]
+    scores = jnp.where(valid[:, None, None, :], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrl,blgd->bgrd", probs,
+                     v_eff.astype(probs.dtype)).reshape(b, 1, h * hd)
+    new_cache = {"k": k_cache, "v": v_cache}
+    if quant:
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    return jnp.dot(out, params["wo"]), new_cache
+
+
+# =================================================================== MLA
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    r = m.kv_lora_rank ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, h * qk_hd)) * s).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[1], (d, m.kv_lora_rank)) * s).astype(dtype),
+        "w_krope": (jax.random.normal(ks[2], (d, m.qk_rope_head_dim)) * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim)) * r).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (m.kv_lora_rank, h * m.v_head_dim)) * r).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (h * m.v_head_dim, d))
+               * (h * m.v_head_dim) ** -0.5).astype(dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def mla_full(params, cfg, x, positions, **_):
+    """MLA prefill/train: expand the latent and run standard attention.
+
+    Returns (out, (c_kv, k_rope)) for cache writing.
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vhd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    c_kv = rmsnorm(jnp.dot(x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps)
+    k_pe = jnp.dot(x, params["w_krope"]).reshape(b, s, 1, rope_d)
+    cos, sin = rope_cos_sin(positions, rope_d, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe, cos, sin)
+    k_nope = jnp.dot(c_kv, params["w_uk"]).reshape(b, s, h, nope)
+    v = jnp.dot(c_kv, params["w_uv"]).reshape(b, s, h, vhd)
+    scale = 1.0 / jnp.sqrt(nope + rope_d).astype(x.dtype)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkhd->bhqk", q_pe,
+                           jnp.broadcast_to(k_pe, (b, s, h, rope_d)))) * scale
+    mask = _causal_mask(s, s, 0, 0)
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, h * vhd)
+    return jnp.dot(out, params["wo"]), (c_kv, k_pe[:, :, 0, :])
+
+
+def mla_decode(params, cfg, x, positions, ckv_cache, kpe_cache, cache_pos):
+    """Absorbed MLA decode: attend in the latent space.
+
+    ckv_cache: [B, L, kv_lora]; kpe_cache: [B, L, rope_d].
+    score_l = q_nope_h · W_uk_h · c_l + q_pe_h · kpe_l
+    out_h   = (Σ p_l c_l) · W_uv_h
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.num_heads
+    nope, rope_d, vhd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    rank = m.kv_lora_rank
+    L = ckv_cache.shape[1]
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, nope + rope_d)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    c_kv = rmsnorm(jnp.dot(x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps)  # [B,1,rank]
+    k_pe = jnp.dot(x, params["w_krope"]).reshape(b, 1, 1, rope_d)
+    cos, sin = rope_cos_sin(positions, rope_d, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe, cos, sin)[:, :, 0, :]  # [B,1,rope_d]
+    widx = jnp.mod(cache_pos, L)
+    ckv_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(ckv_cache, c_kv.astype(ckv_cache.dtype), widx)
+    kpe_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(kpe_cache, k_pe.astype(kpe_cache.dtype), widx)
+    n_valid = jnp.minimum(cache_pos + 1, L)
+    # absorb W_uk into q:  q_abs [B,h,rank]
+    w_uk = params["w_uk"].reshape(rank, h, nope)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / jnp.sqrt(nope + rope_d)
+    scores = (jnp.einsum("bhr,blr->bhl", q_abs.astype(jnp.float32),
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bhd,bld->bhl", q_pe[:, 0].astype(jnp.float32),
+                           kpe_cache.astype(jnp.float32))) * scale
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", probs,
+                     ckv_cache.astype(jnp.float32)).astype(x.dtype)  # [B,h,rank]
+    w_uv = params["w_uv"].reshape(rank, h, vhd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * vhd)
+    return jnp.dot(out, params["wo"]), ckv_cache, kpe_cache
+
+
+def gqa_continue(params, cfg, x, positions, k_cache, v_cache, start_pos):
+    """Chunked-prefill continuation (Sarathi-style): a chunk of C tokens at
+    absolute positions [start_pos, start_pos+C) attends to the cached
+    prefix plus itself, then writes itself into the cache.
+
+    Ring-safe: the cache may be a window ring (slot t%L holds token t).
+    Attention is computed in two parts — prefix (ring, token-id masked) and
+    the fresh chunk (intra-chunk causal) — BEFORE the chunk is written, so
+    in-chunk evictions cannot clobber keys still needed by earlier queries.
+    Requires C <= L.
+
+    x: [B, C, D]; k_cache/v_cache: [B, L, kv, hd]; start_pos: int/traced.
+    Returns (out [B,C,D], new_k_cache, new_v_cache).
+    """
+    b, c, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = k_cache.shape[1]
+    assert c <= L, "chunk larger than the cache ring"
+    q = jnp.dot(x, params["wq"]).reshape(b, c, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, c, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, c, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    sp = jnp.asarray(start_pos, jnp.int32)
+    window = cfg.sliding_window
+    rep = h // kv
+    qg = q.reshape(b, c, kv, rep, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(x.dtype)
+    qpos = sp + jnp.arange(c, dtype=jnp.int32)[:, None]        # [c,1]
+
+    # ---- part 1: cached prefix (tokens < sp), ring token-id masking
+    slots = jnp.arange(L, dtype=jnp.int32)[None, :]            # [1,L]
+    # largest token id t == slot (mod L) with t < sp
+    t_slot = sp - 1 - jnp.mod(sp - 1 - slots, L)               # [1,L]
+    m_pre = (t_slot >= 0) & (t_slot <= qpos)
+    if window > 0:
+        m_pre &= t_slot > qpos - window
+    s_pre = jnp.einsum("bqgrd,blgd->bgrql", qg,
+                       k_cache.astype(qg.dtype)) * scale
+    s_pre = jnp.where(m_pre[None, None, None], s_pre.astype(jnp.float32),
+                      NEG_INF)
+
+    # ---- part 2: the fresh chunk, intra-chunk causal
+    cpos = sp + jnp.arange(c, dtype=jnp.int32)[None, :]        # [1,c]
+    m_chk = cpos <= qpos
+    if window > 0:
+        m_chk &= cpos > qpos - window
+    s_chk = jnp.einsum("bqgrd,bcgd->bgrqc", qg, k) * scale
+    s_chk = jnp.where(m_chk[None, None, None], s_chk.astype(jnp.float32),
+                      NEG_INF)
+
+    scores = jnp.concatenate([s_pre, s_chk], axis=-1)          # [b,g,r,q,L+c]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrql,blgd->bqgrd", probs[..., :L],
+                     v_cache.astype(probs.dtype)) + \
+        jnp.einsum("bgrqc,bcgd->bqgrd", probs[..., L:], v)
+    out = out.reshape(b, c, h * hd)
+
+    # ---- deferred ring write of the chunk
+    widx = jnp.mod(sp + jnp.arange(c, dtype=jnp.int32), L)
+    k_cache = k_cache.at[:, widx].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[:, widx].set(v.astype(v_cache.dtype))
+    return jnp.dot(out, params["wo"]), k_cache, v_cache

@@ -1,0 +1,146 @@
+"""Decode caches: per-layer KV (full or ring-buffer window), MLA latent
+cache, and SSM recurrent state.  A cache is a plain pytree:
+
+{
+  "pos":   [B] int32            # tokens generated so far (global position)
+  "layers": [per-layer dict]    # kind-dependent
+}
+
+Layer kinds:
+  attn  -> {"k": [B,L,kv,hd], "v": [B,L,kv,hd]}
+  mla   -> {"ckv": [B,L,rank], "kpe": [B,L,rope_d]}
+  ssm   -> {"conv": [B,K-1,conv_ch], "ssm": [B,nh,hd,ds] f32}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ATTN, SSM, ModelConfig
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Per-layer KV length: sliding-window archs only keep the window."""
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               window: int = 0, quantized: bool = False):
+    """window > 0 forces a ring-buffer of that size on attention layers
+    (the StreamingLLM-style long-context serving mode).
+
+    ``quantized``: int8 KV with per-(token, head) bf16 scales — halves the
+    decode memory term (§Perf; vLLM-style kv-cache quantization adapted to
+    the static-slot TPU layout)."""
+    if dtype is None:
+        dtype = jnp.dtype(cfg.dtype)
+    L = cache_len(cfg, max_len)
+    if window:
+        L = min(L, window)
+    layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == SSM:
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            layers.append({
+                "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state),
+                                  dtype),
+                "ssm": jnp.zeros((batch, s.n_heads(cfg.d_model), s.head_dim,
+                                  s.d_state), jnp.float32),
+            })
+        elif cfg.mla is not None:
+            m = cfg.mla
+            layers.append({
+                "ckv": jnp.zeros((batch, L, m.kv_lora_rank), dtype),
+                "kpe": jnp.zeros((batch, L, m.qk_rope_head_dim), dtype),
+            })
+        else:
+            if quantized:
+                layers.append({
+                    "k": jnp.zeros((batch, L, cfg.num_kv_heads,
+                                    cfg.head_dim), jnp.int8),
+                    "v": jnp.zeros((batch, L, cfg.num_kv_heads,
+                                    cfg.head_dim), jnp.int8),
+                    "k_scale": jnp.zeros((batch, L, cfg.num_kv_heads, 1),
+                                         jnp.bfloat16),
+                    "v_scale": jnp.zeros((batch, L, cfg.num_kv_heads, 1),
+                                         jnp.bfloat16),
+                })
+            else:
+                layers.append({
+                    "k": jnp.zeros((batch, L, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, L, cfg.num_kv_heads,
+                                    cfg.head_dim), dtype),
+                })
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": layers}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               window: int = 0, quantized: bool = False):
+    """ShapeDtypeStruct pytree mirroring ``init_cache`` (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype, window, quantized))
+
+
+def quantize_kv(x):
+    """x: [..., hd] -> (int8 values, bf16 scale [..., 1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.bfloat16) * scale
+
+
+def _ring_write(buf, vals):
+    """Write a prefilled sequence into a ring buffer of length L, keeping the
+    ring invariant ``token t lives at slot t % L``.
+
+    buf: [B, L, ...]; vals: [B, S, ...] (tokens 0..S-1).
+    """
+    L = buf.shape[1]
+    s = vals.shape[1]
+    vals = vals.astype(buf.dtype)
+    if s < L:
+        return jax.lax.dynamic_update_slice(
+            buf, vals, (0,) * buf.ndim)
+    kept = vals[:, s - L:]              # tokens s-L .. s-1, in order
+    return jnp.roll(kept, shift=s % L, axis=1)
+
+
+def write_prefill(cache, layer_idx: int, kv_tuple, cfg: ModelConfig):
+    """Write full-sequence K/V (or latent) produced by a prefill pass into
+    the cache at positions [0, S)."""
+    layer = cache["layers"][layer_idx]
+    if "ssm" in layer:
+        conv, ssm = kv_tuple
+        layer = {"conv": conv.astype(layer["conv"].dtype), "ssm": ssm}
+    elif "ckv" in layer:
+        ckv, kpe = kv_tuple
+        layer = {
+            "ckv": _ring_write(layer["ckv"], ckv),
+            "kpe": _ring_write(layer["kpe"], kpe),
+        }
+    else:
+        k, v = kv_tuple
+        if "k_scale" in layer:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            layer = {
+                "k": _ring_write(layer["k"], kq),
+                "v": _ring_write(layer["v"], vq),
+                "k_scale": _ring_write(layer["k_scale"], ks),
+                "v_scale": _ring_write(layer["v_scale"], vs),
+            }
+        else:
+            layer = {
+                "k": _ring_write(layer["k"], k),
+                "v": _ring_write(layer["v"], v),
+            }
+    cache["layers"][layer_idx] = layer
+    return cache

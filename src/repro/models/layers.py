@@ -1,0 +1,115 @@
+"""Shared layer primitives: norms, rotary embeddings (incl. M-RoPE), MLPs."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, params, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rmsnorm(x, params["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg, d):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for half the head dim. [hd/2] f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 mrope_sections: Tuple[int, ...] = ()) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables.
+
+    positions: [..., seq] int32 for 1-D RoPE, or [..., seq, 3] for M-RoPE
+    (temporal, height, width position ids — Qwen2-VL arXiv:2409.12191).
+    Returns cos, sin of shape [..., seq, head_dim/2] f32.
+    """
+    inv = rope_freqs(head_dim, theta)  # [hd/2]
+    if mrope_sections:
+        assert positions.shape[-1] == 3, "M-RoPE needs 3-d position ids"
+        # angles per component: [..., seq, 3, hd/2]
+        ang3 = positions[..., None].astype(jnp.float32) * inv  # [...,seq,3,hd/2]
+        # per-frequency component selector from section layout
+        sec = jnp.concatenate([
+            jnp.full((s,), i, dtype=jnp.int32)
+            for i, s in enumerate(mrope_sections)])  # [hd/2]
+        onehot = jax.nn.one_hot(sec, 3, dtype=jnp.float32)  # [hd/2, 3]
+        ang = jnp.einsum("...kf,fk->...f", ang3, onehot)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv  # [...,seq,hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim/2]."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------- mlp
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.dot(x, w_gate)
+    u = jnp.dot(x, w_up)
+    return jnp.dot(jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_up, w_down):
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, w_up)), w_down)
+
+
+def init_mlp(key, cfg, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+        }
+    return {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def apply_mlp(x, params, cfg):
+    if cfg.mlp_type == "swiglu":
+        return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])
+    return gelu_mlp(x, params["w_up"], params["w_down"])

@@ -1,0 +1,201 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward for train/prefill (quadratic inside a chunk, linear
+recurrence across chunks via ``lax.scan``/associative form) and an O(1)
+single-token decode step against a recurrent state cache.
+
+Layout conventions:
+  x (inner)    [B, S, nh, hd]
+  B, C         [B, S, ds]          (n_groups = 1)
+  dt           [B, S, nh]          (after softplus)
+  ssm state    [B, nh, hd, ds]
+  conv state   [B, d_conv-1, d_inner + 2*ds]
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+def init_mamba2(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ds = s.d_state
+    conv_ch = di + 2 * ds
+    d_in_proj = 2 * di + 2 * ds + nh
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in_proj)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[3], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    ds = s.d_state
+    nh = s.n_heads(d)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * ds]
+    dt = zxbcdt[..., di + di + 2 * ds:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv_full(xbc, conv_w, conv_b, conv_state=None):
+    """xbc: [B, S, C]; conv_w [K, C] depthwise.  Returns (y, new_state)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+K-1, C]
+    # depthwise causal conv via stacked shifts (K is tiny, typically 4)
+    y = sum(xp[:, i: i + xbc.shape[1], :] * conv_w[i] for i in range(k))
+    y = jax.nn.silu(y + conv_b)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad[:, :0]
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B,S,nh,hd]; dt: [B,S,nh] (post-softplus); A: [nh] (negative);
+    Bm, Cm: [B,S,ds].  Returns (y [B,S,nh,hd], final_state [B,nh,hd,ds]).
+    S must be a multiple of ``chunk``.
+    """
+    b, s, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, nh, hd).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = Bm.reshape(b, nc, chunk, ds).astype(f32)
+    Cc = Cm.reshape(b, nc, chunk, ds).astype(f32)
+
+    dA = dtc * A[None, None, None, :]           # [b,nc,q,nh]  (negative)
+    cum = jnp.cumsum(dA, axis=2)                # running log-decay in chunk
+    # --- intra-chunk (quadratic) ---
+    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,i,j,nh]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of +large on the masked side would be inf and
+    # poison gradients through the where (0 * inf = nan under autodiff)
+    diff = jnp.where(tril[None, None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    cb = jnp.einsum("bnid,bnjd->bnij", Cc, Bc)             # [b,nc,i,j]
+    att = cb[..., None] * L                                # [b,nc,i,j,nh]
+    xdt = xc * dtc[..., None]                              # [b,nc,j,nh,hd]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", att, xdt)
+
+    # --- chunk summary states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [b,nc,j,nh]
+    # S_n = sum_j decay_to_end_j * dt_j * B_j ⊗ x_j : [b,nc,nh,hd,ds]
+    states = jnp.einsum("bnjh,bnjhp,bnjd->bnhpd",
+                        decay_to_end * dtc, xc, Bc)
+
+    # --- inter-chunk recurrence over nc chunks ---
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))             # [b,nc,nh]
+    s0 = (jnp.zeros((b, nh, hd, ds), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, dec = inp                                      # [b,nh,hd,ds],[b,nh]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                  # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [b,nc,nh,hd,ds]
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                                # decay from chunk start
+    y_inter = jnp.einsum("bnid,bnih,bnhpd->bnihp",
+                         Cc, in_decay, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final
+
+
+def mamba2_full(params, cfg, x, conv_state=None, ssm_state=None):
+    """Full-sequence Mamba2. x: [B,S,D].
+
+    Returns (out [B,S,D], (conv_state, ssm_state)).
+    """
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    hd = s_cfg.head_dim
+    ds = s_cfg.d_state
+    zxbcdt = jnp.dot(x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv_full(xbc, params["conv_w"], params["conv_b"],
+                                      conv_state)
+    xin = xbc[..., :di].reshape(b, s, nh, hd)
+    Bm = xbc[..., di: di + ds]
+    Cm = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    # pad sequence to a chunk multiple if needed
+    chunk = min(s_cfg.chunk_size, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, final = ssd_chunked(zpad(xin), zpad(dt), A, zpad(Bm), zpad(Cm),
+                               chunk, ssm_state)
+        y = y[:, :s]
+    else:
+        y, final = ssd_chunked(xin, dt, A, Bm, Cm, chunk, ssm_state)
+    y = y + params["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.dot(y, params["out_proj"]), (new_conv, final)
+
+
+def mamba2_decode(params, cfg, x, conv_state, ssm_state):
+    """One-token recurrent step. x: [B,1,D].
+
+    conv_state: [B, K-1, conv_ch]; ssm_state: [B,nh,hd,ds] f32.
+    Returns (out [B,1,D], new_conv_state, new_ssm_state).
+    """
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    assert s == 1
+    di = s_cfg.d_inner(d)
+    nh, hd, ds = s_cfg.n_heads(d), s_cfg.head_dim, s_cfg.d_state
+    zxbcdt = jnp.dot(x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    k = params["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xbc], axis=1)    # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(y + params["conv_b"])[:, None, :]
+    new_conv = window[:, 1:, :]
+    xin = xbc[..., :di].reshape(b, nh, hd).astype(jnp.float32)
+    Bm = xbc[:, 0, di: di + ds].astype(jnp.float32)
+    Cm = xbc[:, 0, di + ds:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,nh]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                      # [B,nh]
+    upd = jnp.einsum("bh,bhp,bd->bhpd", dtv, xin, Bm)
+    new_state = ssm_state * decay[:, :, None, None] + upd
+    yv = jnp.einsum("bhpd,bd->bhp", new_state, Cm)
+    yv = yv + params["D"][None, :, None] * xin
+    yv = yv.reshape(b, 1, di).astype(x.dtype)
+    yv = rmsnorm(yv * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.dot(yv, params["out_proj"]), new_conv, new_state

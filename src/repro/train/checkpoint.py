@@ -1,0 +1,74 @@
+"""Checkpointing: save/restore params + optimizer state pytrees.
+
+Format: one ``.npz`` with flattened key paths plus a small JSON manifest —
+dependency-free, deterministic, and safe to memory-map on restore. Sharded
+arrays are gathered by ``np.asarray`` (host-local in this container; on a
+real pod use one process per host with ``jax.experimental.multihost_utils``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+from repro.train.optimizer import AdamWState
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, opt_state: AdamWState = None, step: int = 0,
+         meta: dict = None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = {"params" + _SEP + k: v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({"mu" + _SEP + k: v
+                        for k, v in _flatten(opt_state.mu).items()})
+        payload.update({"nu" + _SEP + k: v
+                        for k, v in _flatten(opt_state.nu).items()})
+        payload["opt_step"] = np.asarray(opt_state.step)
+    np.savez(path, **payload)
+    with open(path + ".json", "w") as f:
+        json.dump({"step": step, "meta": meta or {},
+                   "has_opt": opt_state is not None}, f)
+
+
+def _unflatten_into(template, flat: dict, prefix: str):
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = prefix + _SEP + _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore(path: str, params_template, opt_template: AdamWState = None
+            ) -> Tuple[Any, Any, int]:
+    """Returns (params, opt_state_or_None, step)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    with open((path if not path.endswith(".npz") else path[:-4]) + ".json"
+              if not os.path.exists(path + ".json") else path + ".json") as f:
+        manifest = json.load(f)
+    params = _unflatten_into(params_template, flat, "params")
+    opt_state = None
+    if opt_template is not None and manifest.get("has_opt"):
+        mu = _unflatten_into(opt_template.mu, flat, "mu")
+        nu = _unflatten_into(opt_template.nu, flat, "nu")
+        opt_state = AdamWState(step=jax.numpy.asarray(flat["opt_step"]),
+                               mu=mu, nu=nu)
+    return params, opt_state, manifest["step"]

@@ -1,0 +1,63 @@
+"""Training step: causal-LM loss + AdamW update, pjit-shardable."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import forward_full
+from repro.models.moe import ShardingCtx
+from repro.train import optimizer as opt
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, mask=None,
+            embeds=None, ctx: Optional[ShardingCtx] = None,
+            remat: bool = True):
+    """Mean next-token cross entropy (+ MoE aux). labels: [B,S] (or
+    [B,S,K] for multi-codebook audio), -100 = ignore."""
+    logits, _, aux = forward_full(params, cfg, tokens=tokens, embeds=embeds,
+                                  ctx=ctx, remat=remat)
+    valid = (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    # Sharding-friendly cross entropy: select the target logit with a
+    # masked sum over the (vocab-sharded) class dim instead of
+    # take_along_axis — GSPMD then emits tiny [B,S] all-reduces rather
+    # than gathering/permuting the full [B,S,V] logits (§Perf iteration 2).
+    lg = logits.astype(jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    target = jnp.sum(jnp.where(vocab_iota == safe[..., None], lg, 0.0),
+                     axis=-1)
+    m = jnp.max(lg, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1))
+    nll = lse - target
+    if mask is not None:
+        valid = valid & (mask > 0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    return loss + AUX_LOSS_WEIGHT * aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+def train_step(cfg: ModelConfig, opt_cfg: opt.AdamWConfig, params, opt_state,
+               batch, ctx: Optional[ShardingCtx] = None, remat: bool = True):
+    """batch: {"tokens": [B,S], "labels": [B,S]} (or "embeds" for VLM).
+
+    Pure function — safe to jit/pjit with in/out shardings.
+    """
+    def loss_fn(p):
+        return lm_loss(p, cfg, batch.get("tokens"), batch["labels"],
+                       mask=batch.get("mask"), embeds=batch.get("embeds"),
+                       ctx=ctx, remat=remat)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state, om = opt.apply(opt_cfg, params, grads, opt_state)
+    metrics = dict(metrics, loss=loss, **om)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg, opt_cfg, ctx=None, remat=True):
+    return partial(train_step, cfg, opt_cfg, ctx=ctx, remat=remat)

@@ -1,0 +1,135 @@
+"""System integration: scheduler + simulator end-to-end, JAX annealer
+consistency, scheduler component interplay (Algorithm 2)."""
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_TABLE2, SAParams, SLOAwareScheduler, as_arrays,
+                        evaluate, run_fcfs_continuous, run_multi_instance,
+                        run_priority_continuous)
+from repro.core.profiler import (MemoryModel, OutputLengthPredictor)
+from repro.data.synthetic import sample_requests
+
+
+def test_scheduler_end_to_end_single_instance():
+    reqs = sample_requests(16, seed=3)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    sched = SLOAwareScheduler(PAPER_TABLE2, num_instances=1, max_batch=4,
+                              sa_params=SAParams(seed=0))
+    out = sched.schedule(reqs)
+    assert len(out.queues) == 1
+    ids = sorted(r.req_id for b in out.queues[0].batches for r in b)
+    assert ids == list(range(16))
+    for b in out.queues[0].batches:
+        assert 1 <= len(b) <= 4
+    sim = run_priority_continuous(out.queues[0].batches, PAPER_TABLE2, 4)
+    assert sim.n == 16
+
+
+def test_scheduler_contended_beats_fcfs():
+    """Under contention the SLO-aware order should not lose to FCFS
+    (averaged over seeds)."""
+    gains = []
+    for seed in (11, 12, 13, 14, 15):
+        reqs = sample_requests(20, seed=seed)
+        for r in reqs:
+            r.predicted_output_len = r.output_len   # oracle predictor
+        fcfs = run_fcfs_continuous(reqs, PAPER_TABLE2, 2)
+        sched = SLOAwareScheduler(PAPER_TABLE2, num_instances=1, max_batch=2,
+                                  sa_params=SAParams(
+                                      seed=0, budget_mode="per_level"))
+        out = sched.schedule(reqs)
+        slo = run_priority_continuous(out.queues[0].batches, PAPER_TABLE2, 2)
+        gains.append(slo.G / fcfs.G if fcfs.G > 0 else 1.0)
+    assert np.mean(gains) > 1.0, gains
+
+
+def test_multi_instance_assignment_balances():
+    reqs = sample_requests(30, seed=7)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    mem = MemoryModel(total_memory=32e9, mu=0.9, sigma_per_token=2e5)
+    sched = SLOAwareScheduler(PAPER_TABLE2, num_instances=3, max_batch=4,
+                              memory=mem, sa_params=SAParams(seed=0))
+    out = sched.schedule(reqs)
+    sizes = [len(q) for q in out.queues]
+    assert sum(sizes) == 30
+    assert max(sizes) - min(sizes) <= 12   # roughly balanced
+    assert set(out.assignment.values()) <= {0, 1, 2}
+
+
+def test_memory_model_eq20():
+    mem = MemoryModel(total_memory=10e9, mu=0.8, sigma_per_token=1e5)
+    assert mem.token_capacity(10e9) == int(10e9 * 0.8 / 1e5)
+    # observe runs and refit
+    mem.observe_run(peak_mem=8e9, avail_mem=10e9, tokens=50_000,
+                    mem_used=6e9)
+    assert mem.mu == pytest.approx(0.8)
+    assert mem.sigma == pytest.approx(6e9 / 50_000)
+
+
+def test_output_length_predictor_converges():
+    pred = OutputLengthPredictor(seed=0)
+    rng = np.random.default_rng(0)
+    for _ in range(500):
+        pred.observe("code", int(rng.normal(300, 30)))
+    mean = np.mean([pred.predict("code") for _ in range(200)])
+    assert abs(mean - 300) < 30
+    assert pred.predict_mean("code") == pytest.approx(300, abs=10)
+
+
+def test_jax_annealer_agrees_with_numpy_objective():
+    from repro.core.annealing_jax import JaxSAConfig, priority_mapping_jax
+    reqs = sample_requests(12, seed=2)
+    arrays = as_arrays(reqs)
+    perm, bid, g = priority_mapping_jax(arrays, PAPER_TABLE2, 3,
+                                        JaxSAConfig(iters=50, num_chains=2),
+                                        seed=0)
+    ev = evaluate(arrays, PAPER_TABLE2, perm, bid)
+    assert abs(ev.G - g) / max(g, 1e-12) < 2e-3   # f32 vs f64 tolerance
+    assert sorted(perm.tolist()) == list(range(12))
+    assert np.bincount(bid).max() <= 3
+
+
+def test_simulator_planned_vs_continuous_semantics():
+    """Planned lock-step must never finish earlier than continuous with the
+    same order/batching (continuous dominates)."""
+    reqs = sample_requests(12, seed=9)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    batches = [reqs[i:i + 3] for i in range(0, 12, 3)]
+    from repro.core.simulator import run_planned
+    locked = run_planned(batches, PAPER_TABLE2)
+    cont = run_priority_continuous(batches, PAPER_TABLE2, 3)
+    assert cont.total_latency <= locked.total_latency * 1.05
+
+
+def test_online_scheduling_under_load():
+    """Online re-annealing never loses to FCFS under heavy arrivals."""
+    import numpy as np
+    from repro.core import SAParams
+    from repro.core.online import simulate_online
+    rng = np.random.default_rng(3)
+    reqs = sample_requests(24, seed=8)
+    t = 0.0
+    for r in reqs:
+        t += rng.exponential(0.25)
+        r.arrival_time = t
+        r.predicted_output_len = r.output_len
+    f = simulate_online(reqs, PAPER_TABLE2, 4, "fcfs")
+    s = simulate_online(reqs, PAPER_TABLE2, 4, "slo", SAParams(seed=0))
+    assert s.n == f.n == 24
+    assert s.G >= f.G * 0.95
+
+
+def test_metrics_report():
+    from repro.core.metrics import report
+    reqs = sample_requests(20, seed=4)
+    sim = run_fcfs_continuous(reqs, PAPER_TABLE2, 4)
+    rep = report(sim, reqs)
+    assert rep.count == 20
+    assert 0 <= rep.attainment <= 1
+    assert rep.e2e_p50 <= rep.e2e_p90 <= rep.e2e_p99
+    assert set(rep.per_task) == {"code", "chat"}
+    rows = rep.rows()
+    assert len(rows) == 3 and rows[0][0] == "serving_summary"

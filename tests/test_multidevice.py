@@ -1,0 +1,19 @@
+"""Multi-virtual-device correctness (subprocess: device count is locked at
+first jax init, so these run in a child with 8 host devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_ep_moe_and_seq_parallel_attention_multidevice():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "helpers",
+                                      "verify_multidevice.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ALL OK" in out.stdout

@@ -1,0 +1,158 @@
+"""Unit tests for the paper's core: objective G, Algorithm 1, exhaustive
+oracle, latency model, and the worked examples from Figs. 3-5."""
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_TABLE2, SAParams, as_arrays, evaluate,
+                        exhaustive_search, fcfs_schedule, priority_mapping)
+from repro.core.latency_model import LinearLatencyModel, fit
+from repro.core.slo import SLO, Request
+from repro.data.synthetic import sample_requests
+
+
+def _const_model(exec_s_per_token: float = 0.0):
+    """A model where exec time is delta_p + delta_d * l_o (b-independent)."""
+    return LinearLatencyModel(0, 0, 0, 0.0, 0, 0, 0, exec_s_per_token)
+
+
+def make_requests(execs, slos):
+    """Requests with e2e SLOs whose exec time ~= execs[i] (via delta_d)."""
+    reqs = []
+    for i, (e, s) in enumerate(zip(execs, slos)):
+        reqs.append(Request(req_id=i, task_type="code", input_len=1,
+                            output_len=1000, slo=SLO(e2e=s)))
+    return reqs
+
+
+class TestFig3Example:
+    """Paper Fig. 3: three jobs, exec 300/500/800ms, SLOs 800/500/1800ms."""
+
+    def setup_method(self):
+        # model: exec = delta_d * l_o ; choose l_o to give 0.3/0.5/0.8 s
+        self.model = LinearLatencyModel(0, 0, 0, 0, 0, 0, 0, 1e-3)
+        self.reqs = [
+            Request(0, "code", 1, SLO(e2e=0.8), output_len=300),
+            Request(1, "code", 1, SLO(e2e=0.5), output_len=500),
+            Request(2, "code", 1, SLO(e2e=1.8), output_len=800),
+        ]
+        self.arrays = as_arrays(self.reqs)
+
+    def test_exec_order_by_time_misses_job2(self):
+        # (B): order 1,2,3 -> job2 finishes at 0.8 > 0.5 SLO
+        ev = evaluate(self.arrays, self.model, np.array([0, 1, 2]),
+                      np.array([0, 1, 2]))
+        assert ev.n_met == 2
+        assert ev.met[1] == False  # noqa: E712
+
+    def test_slo_aware_order_meets_all(self):
+        # (C): job2 first -> all meet SLOs, G improves
+        ev = evaluate(self.arrays, self.model, np.array([1, 0, 2]),
+                      np.array([0, 1, 2]))
+        assert ev.n_met == 3
+        ev_b = evaluate(self.arrays, self.model, np.array([0, 1, 2]),
+                        np.array([0, 1, 2]))
+        assert ev.G > ev_b.G
+
+    def test_sa_finds_the_slo_aware_order(self):
+        res = priority_mapping(self.arrays, self.model, 1, SAParams(seed=0))
+        ev = evaluate(self.arrays, self.model, res.perm, res.batch_id)
+        assert ev.n_met == 3
+
+
+def test_wait_times_accumulate_across_batches():
+    model = LinearLatencyModel(0, 0, 0, 1.0, 0, 0, 0, 0)  # 1 s prefill
+    reqs = [Request(i, "code", 1, SLO(e2e=100), output_len=1)
+            for i in range(4)]
+    arrays = as_arrays(reqs)
+    ev = evaluate(arrays, model, np.arange(4), np.array([0, 0, 1, 1]))
+    # batch 0 requests wait 0, batch 1 requests wait 1 s
+    np.testing.assert_allclose(ev.e2e[:2], 1.0)
+    np.testing.assert_allclose(ev.e2e[2:], 2.0)
+
+
+def test_batch_size_affects_exec_time():
+    model = LinearLatencyModel(0, 1.0, 0, 0, 0, 0, 0, 0)  # beta_p = 1s/req
+    reqs = [Request(i, "code", 1, SLO(e2e=100), output_len=1)
+            for i in range(4)]
+    arrays = as_arrays(reqs)
+    ev1 = evaluate(arrays, model, np.arange(4), np.arange(4))     # b=1 each
+    ev4 = evaluate(arrays, model, np.arange(4), np.zeros(4, int))  # b=4
+    assert ev1.e2e[0] == pytest.approx(1.0)
+    assert ev4.e2e[0] == pytest.approx(4.0)  # slower per request when batched
+
+
+def test_ttft_tpot_slo_class():
+    model = LinearLatencyModel(0, 0, 0, 0.5, 0, 0, 0, 0.01)
+    ok = Request(0, "chat", 100, SLO(ttft=1.0, tpot=0.05), output_len=10)
+    bad_ttft = Request(1, "chat", 100, SLO(ttft=0.1, tpot=0.05),
+                       output_len=10)
+    bad_tpot = Request(2, "chat", 100, SLO(ttft=1.0, tpot=0.005),
+                       output_len=10)
+    arrays = as_arrays([ok, bad_ttft, bad_tpot])
+    ev = evaluate(arrays, model, np.arange(3), np.arange(3))
+    assert list(ev.met) == [True, False, False]
+
+
+def test_sa_matches_exhaustive_small():
+    """Paper: <=1.0% degradation vs exhaustive.  Holds for CONTENDED
+    workloads — when the e2e-sorted start meets every SLO, Algorithm 1's
+    line-7 early exit returns it without optimizing G further (faithful
+    behaviour), so SLOs are tightened here to force the search."""
+    import dataclasses
+    for seed in (1, 2, 3):
+        reqs = sample_requests(5, seed=seed)
+        for r in reqs:
+            r.slo = dataclasses.replace(
+                r.slo,
+                e2e=r.slo.e2e * 0.2 if r.slo.e2e else None,
+                ttft=r.slo.ttft * 0.02 if r.slo.ttft else None,
+                tpot=r.slo.tpot * 0.5 if r.slo.tpot else None)
+        arrays = as_arrays(reqs)
+        _, _, g_opt, _ = exhaustive_search(arrays, PAPER_TABLE2, 2)
+        # parallel chains (best of 3 seeds), as the jitted annealer runs
+        res = [priority_mapping(arrays, PAPER_TABLE2, 2,
+                                SAParams(seed=s, iters=300,
+                                         budget_mode="per_level"))
+               for s in (0, 1, 2)]
+        assert not any(r.early_exit for r in res)
+        g_sa = max(r.G for r in res)
+        assert g_sa >= g_opt * 0.99
+
+
+def test_sa_never_worse_than_both_starts():
+    for seed in range(5):
+        arrays = as_arrays(sample_requests(12, seed=seed))
+        n = 12
+        p0, b0 = fcfs_schedule(n, 4)
+        g0 = evaluate(arrays, PAPER_TABLE2, p0, b0).G
+        res = priority_mapping(arrays, PAPER_TABLE2, 4, SAParams(seed=seed))
+        assert res.G >= g0 - 1e-12
+
+
+def test_early_exit_when_all_slos_met():
+    reqs = [Request(i, "code", 10, SLO(e2e=1e6), output_len=5)
+            for i in range(6)]
+    res = priority_mapping(as_arrays(reqs), PAPER_TABLE2, 2, SAParams())
+    assert res.early_exit
+
+
+def test_latency_model_closed_form_decode():
+    m = PAPER_TABLE2
+    for b in (1, 4):
+        for li in (50, 700):
+            for lo in (1, 13, 200):
+                explicit = sum(m.per_token_decode_time(b, li + k)
+                               for k in range(1, lo + 1))
+                assert m.decode_time(b, li, lo) == pytest.approx(
+                    explicit, rel=1e-9)
+
+
+def test_fit_recovers_exact_coefficients():
+    true = PAPER_TABLE2
+    pre = [(b, l, true.prefill_time(b, l))
+           for b in (1, 2, 4, 8) for l in (100, 400, 900, 1500)]
+    dec = [(b, l, true.per_token_decode_time(b, l))
+           for b in (1, 2, 4, 8) for l in (100, 400, 900, 1500)]
+    m = fit(pre, dec)
+    np.testing.assert_allclose(m.as_tuple(), true.as_tuple(), rtol=1e-6,
+                               atol=1e-12)
