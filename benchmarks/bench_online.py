@@ -34,6 +34,15 @@ def main(quick: bool = False):
         rows.append([f"online_rate{rate}_slo", round(dts * 1e6, 1),
                      f"G={s.G:.4f};att={s.attainment:.3f};"
                      f"G_vs_fcfs={s.G / f.G if f.G else 0:.3f}"])
+        # multi-instance online (unified event core): 2 instances drain a
+        # shared queue, each admission re-annealed
+        for ninst in (2,):
+            m, dtm = timeit(simulate_online, reqs, PAPER_TABLE2, 4, "slo",
+                            SAParams(seed=1), num_instances=ninst, repeat=1)
+            rows.append([f"online_rate{rate}_slo_x{ninst}",
+                         round(dtm * 1e6, 1),
+                         f"G={m.G:.4f};att={m.attainment:.3f};"
+                         f"att_vs_1inst={m.attainment / s.attainment if s.attainment else 0:.3f}"])
     emit(rows, ["name", "us_per_call", "derived"], "online")
     return rows
 

@@ -7,26 +7,33 @@ discrete-event execution simulator used by the benchmarks.
 """
 from repro.core.slo import SLO, Request, as_arrays, meets_slo
 from repro.core.latency_model import LinearLatencyModel, PAPER_TABLE2, fit
-from repro.core.objective import (ScheduleEval, calculate_g, evaluate,
-                                  fcfs_schedule, sorted_by_e2e_schedule)
-from repro.core.annealing import SAParams, SAResult, priority_mapping
+from repro.core.objective import (IncrementalEvaluator, ScheduleEval,
+                                  calculate_g, evaluate, fcfs_schedule,
+                                  sorted_by_e2e_schedule)
+from repro.core.annealing import (SAParams, SAResult, apply_move,
+                                  priority_mapping, propose_move)
 from repro.core.exhaustive import exhaustive_search
 from repro.core.profiler import (LatencyProfiler, MemoryModel,
                                  OutputLengthPredictor)
 from repro.core.scheduler import (InstanceQueue, ScheduleOutcome,
                                   SLOAwareScheduler)
-from repro.core.simulator import (SimResult, run_fcfs_continuous,
-                                  run_multi_instance, run_planned,
-                                  run_priority_continuous)
+from repro.core.events import (AdmissionPolicy, FCFSPolicy, PlannedPolicy,
+                               SimResult, SLOReannealPolicy, simulate)
+from repro.core.simulator import (run_fcfs_continuous, run_multi_instance,
+                                  run_planned, run_priority_continuous)
+from repro.core.online import simulate_online
 
 __all__ = [
     "SLO", "Request", "as_arrays", "meets_slo",
     "LinearLatencyModel", "PAPER_TABLE2", "fit",
     "ScheduleEval", "calculate_g", "evaluate", "fcfs_schedule",
-    "sorted_by_e2e_schedule",
-    "SAParams", "SAResult", "priority_mapping", "exhaustive_search",
+    "sorted_by_e2e_schedule", "IncrementalEvaluator",
+    "SAParams", "SAResult", "priority_mapping", "propose_move", "apply_move",
+    "exhaustive_search",
     "LatencyProfiler", "MemoryModel", "OutputLengthPredictor",
     "InstanceQueue", "ScheduleOutcome", "SLOAwareScheduler",
+    "AdmissionPolicy", "FCFSPolicy", "PlannedPolicy", "SLOReannealPolicy",
+    "simulate", "simulate_online",
     "SimResult", "run_fcfs_continuous", "run_multi_instance", "run_planned",
     "run_priority_continuous",
 ]

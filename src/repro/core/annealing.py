@@ -12,6 +12,14 @@ types (paper §4.3):
      new iteration).
   2. randSwapping — exchange the positions of two requests.
 
+Moves are *descriptors* (``("squeeze", k, j)`` etc.) scored by
+``objective.IncrementalEvaluator`` in O(touched batch + n_batches) —
+squeeze/delay/swap only perturb one or two batches, so the hot loop never
+re-evaluates all N requests (``SAParams.incremental=False`` restores the
+full-``evaluate``-per-proposal oracle path, kept for cross-checking and
+benchmarking).  This is what keeps re-annealing cheap enough to run at
+every admission event (paper Table 1's sub-millisecond overhead).
+
 Acceptance: the paper's pseudocode line 32 (`exp(-(f_new-f)/T) < rand`)
 as literally printed never accepts a worse solution (the exponent is
 positive, so exp(·) > 1 > rand).  That degenerates to greedy descent and
@@ -23,6 +31,14 @@ implement standard Metropolis acceptance on the *relative* objective delta,
 which at T = T0 accepts a −10% move with p ≈ 0.9 and at T = T_thres
 (20/500) with p ≈ 0.08 — matching the qualitative behaviour in Fig. 8.
 ``acceptance="greedy"`` reproduces the literal pseudocode.
+
+Early exits (paper line 7, symmetric on both starts and mid-anneal): the
+annealer returns as soon as the e2e-sorted start or the FCFS start meets
+*all* SLOs, and mid-anneal as soon as an accepted candidate meets all
+SLOs *and* is the best-G solution seen so far (the G guard preserves the
+invariant that the result never scores below either starting solution —
+an all-met schedule with pathologically long total latency is still a
+worse G, the paper's actual objective).
 """
 from __future__ import annotations
 
@@ -34,8 +50,8 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core.latency_model import LinearLatencyModel
-from repro.core.objective import (evaluate, fcfs_schedule,
-                                  sorted_by_e2e_schedule)
+from repro.core.objective import (IncrementalEvaluator, evaluate,
+                                  fcfs_schedule, sorted_by_e2e_schedule)
 
 
 @dataclasses.dataclass
@@ -55,6 +71,9 @@ class SAParams:
     # enabled move types (ablation studies): 0=squeeze, 1=delay, 2=swap
     moves: tuple = (0, 1, 2)
     seed: int = 0
+    # score proposals with the incremental-Δ evaluator (False: full
+    # ``evaluate`` per proposal — the O(N) oracle path)
+    incremental: bool = True
 
 
 @dataclasses.dataclass
@@ -87,65 +106,136 @@ def _to_arrays(batches) -> Tuple[np.ndarray, np.ndarray]:
     return np.array(perm, np.int64), np.array(bid, np.int64)
 
 
-def _propose(batches: List[List[int]], max_batch: int,
-             rng: random.Random,
-             moves: tuple = (0, 1, 2)) -> Optional[List[List[int]]]:
-    """Generate a neighbour; None if the sampled move is invalid (no-op)."""
+def _locate(batches: List[List[int]], flat: int) -> Tuple[int, int]:
+    for bi, b in enumerate(batches):
+        if flat < len(b):
+            return bi, flat
+        flat -= len(b)
+    raise IndexError(flat)
+
+
+def propose_move(batches: List[List[int]], max_batch: int,
+                 rng: random.Random,
+                 moves: tuple = (0, 1, 2),
+                 n: Optional[int] = None) -> Optional[tuple]:
+    """Sample a move descriptor; None if the sampled move is invalid
+    (a no-op round, as in the paper's rejection of infeasible moves).
+    ``n`` (total request count) may be passed to skip recounting."""
     nb = len(batches)
+    if nb == 0:
+        return None
     op = rng.choice(moves)
-    new = [list(b) for b in batches]
     if op == 0:        # squeezeLastIter: batch k -> k-1
         k = rng.randrange(nb)
-        if k == 0 or len(new[k - 1]) >= max_batch or not new[k]:
+        if k == 0 or len(batches[k - 1]) >= max_batch:
             return None
-        j = rng.randrange(len(new[k]))
-        new[k - 1].append(new[k].pop(j))
-    elif op == 1:      # delayNextIter: batch k -> k+1 (maybe new)
+        return ("squeeze", k, rng.randrange(len(batches[k])))
+    if op == 1:        # delayNextIter: batch k -> k+1 (maybe new)
         k = rng.randrange(nb)
-        if not new[k] or len(new[k]) == 1 and k == nb - 1:
+        if len(batches[k]) == 1 and k == nb - 1:
             return None
-        if k == nb - 1:
-            new.append([])
-        if len(new[k + 1]) >= max_batch:
+        if k < nb - 1 and len(batches[k + 1]) >= max_batch:
             return None
-        j = rng.randrange(len(new[k]))
-        new[k + 1].insert(0, new[k].pop(j))
-    else:              # randSwapping
-        flat = [(bi, i) for bi, b in enumerate(new) for i in range(len(b))]
-        if len(flat) < 2:
-            return None
-        (b1, i1), (b2, i2) = rng.sample(flat, 2)
-        new[b1][i1], new[b2][i2] = new[b2][i2], new[b1][i1]
-    return [b for b in new if b]
+        return ("delay", k, rng.randrange(len(batches[k])))
+    # randSwapping: two distinct flat positions
+    if n is None:
+        n = sum(len(b) for b in batches)
+    if n < 2:
+        return None
+    i1 = rng.randrange(n)
+    i2 = rng.randrange(n - 1)
+    if i2 >= i1:
+        i2 += 1
+    if nb == n:        # every batch is a singleton (e.g. max_batch == 1)
+        return ("swap", i1, 0, i2, 0)
+    b1, p1 = _locate(batches, i1)
+    b2, p2 = _locate(batches, i2)
+    return ("swap", b1, p1, b2, p2)
+
+
+def apply_move(batches: List[List[int]], move: tuple) -> List[List[int]]:
+    """Pure structural application of a move descriptor (new lists; the
+    input is never mutated).  Mirror of ``IncrementalEvaluator.preview`` —
+    used by the oracle path and the agreement tests."""
+    new = list(batches)
+    op = move[0]
+    if op == "squeeze":
+        k, j = move[1], move[2]
+        src = new[k]
+        new[k - 1] = new[k - 1] + [src[j]]
+        rem = src[:j] + src[j + 1:]
+        if rem:
+            new[k] = rem
+        else:
+            del new[k]
+    elif op == "delay":
+        k, j = move[1], move[2]
+        src = new[k]
+        item = src[j]
+        rem = src[:j] + src[j + 1:]
+        if k == len(new) - 1:
+            if rem:
+                new[k] = rem
+                new.append([item])
+            else:      # singleton last batch: structurally a no-op
+                new[k] = [item]
+        else:
+            new[k + 1] = [item] + new[k + 1]
+            if rem:
+                new[k] = rem
+            else:
+                del new[k]
+    elif op == "swap":
+        b1, i1, b2, i2 = move[1], move[2], move[3], move[4]
+        if b1 == b2:
+            nl = list(new[b1])
+            nl[i1], nl[i2] = nl[i2], nl[i1]
+            new[b1] = nl
+        else:
+            l1, l2 = list(new[b1]), list(new[b2])
+            l1[i1], l2[i2] = l2[i2], l1[i1]
+            new[b1], new[b2] = l1, l2
+    else:
+        raise ValueError(f"unknown move {move!r}")
+    return new
 
 
 def priority_mapping(arrays: dict, model: LinearLatencyModel,
-                     max_batch: int, params: SAParams = SAParams(),
+                     max_batch: int, params: Optional[SAParams] = None,
                      record_history: bool = False) -> SAResult:
     """Algorithm 1.  arrays: columnar requests (slo.as_arrays)."""
+    if params is None:       # None sentinel: a fresh SAParams per call
+        params = SAParams()
     n = len(arrays["input_len"])
     rng = random.Random(params.seed)
     evals = 0
 
-    # two starting solutions (lines 3, 12-15)
+    # two starting solutions (lines 3, 12-15), each with the line-7 exit
     perm_s, bid_s = sorted_by_e2e_schedule(arrays, model, max_batch)
     ev_s = evaluate(arrays, model, perm_s, bid_s)
     evals += 1
-    if ev_s.n_met == n:                      # line 7 early exit
+    if ev_s.n_met == n:
         return SAResult(perm_s, bid_s, ev_s.G, evals, True,
                         [] if record_history else None)
     perm_0, bid_0 = fcfs_schedule(n, max_batch)
     ev_0 = evaluate(arrays, model, perm_0, bid_0)
     evals += 1
+    if ev_0.n_met == n:
+        return SAResult(perm_0, bid_0, ev_0.G, evals, True,
+                        [] if record_history else None)
     if ev_s.G >= ev_0.G:
-        batches, f = _to_batches(perm_s, bid_s), ev_s.G
+        batches = _to_batches(perm_s, bid_s)
     else:
-        batches, f = _to_batches(perm_0, bid_0), ev_0.G
+        batches = _to_batches(perm_0, bid_0)
 
+    inc = IncrementalEvaluator(arrays, model, batches) \
+        if params.incremental else None
+    f = inc.G if inc is not None else max(ev_s.G, ev_0.G)
     best_batches, best_f = batches, f
     f_ref = max(f, 1e-12)
     T = params.T0
     history = [] if record_history else None
+    early = False
     k = 0                                    # line 5 — NOT reset per level
     while T >= params.T_thres:
         if params.budget_mode == "per_level":
@@ -153,22 +243,41 @@ def priority_mapping(arrays: dict, model: LinearLatencyModel,
         level_iters = max(params.iters - k, 1)   # repeat..until runs >= once
         for _ in range(level_iters):
             k += 1
-            cand = _propose(batches, max_batch, rng, params.moves)
-            if cand is None:
+            move = propose_move(batches, max_batch, rng, params.moves, n)
+            if move is None:
                 continue
-            perm_c, bid_c = _to_arrays(cand)
-            f_new = evaluate(arrays, model, perm_c, bid_c).G
+            if inc is not None:
+                f_new, n_met_new, staged = inc.preview(move)
+            else:
+                staged = apply_move(batches, move)
+                perm_c, bid_c = _to_arrays(staged)
+                ev_c = evaluate(arrays, model, perm_c, bid_c)
+                f_new, n_met_new = ev_c.G, ev_c.n_met
             evals += 1
             accept = f_new > f
             if not accept and params.acceptance == "metropolis":
                 p = math.exp((f_new - f) / (f_ref * T / params.T0))
                 accept = rng.random() < p
             if accept:
-                batches, f = cand, f_new
+                if inc is not None:
+                    inc.commit(staged)
+                    batches = inc.batches
+                else:
+                    batches = staged
+                f = f_new
                 if f > best_f:
                     best_batches, best_f = batches, f
+                if n_met_new == n and f >= best_f:
+                    # mid-anneal line-7 exit: all SLOs met — stop searching
+                    best_batches, best_f = batches, f
+                    early = True
+                    break
+        if early:
+            break
         if history is not None:
             history.append((T, f, best_f))
         T *= params.tau
     perm_b, bid_b = _to_arrays(best_batches)
-    return SAResult(perm_b, bid_b, best_f, evals, False, history)
+    # report G on the oracle scale (exact ``evaluate`` agreement)
+    g_final = evaluate(arrays, model, perm_b, bid_b).G
+    return SAResult(perm_b, bid_b, g_final, evals, early, history)

@@ -1,106 +1,45 @@
 """Online SLO-aware scheduling (beyond-paper extension).
 
 The paper schedules a static request pool.  Real services see arrivals
-over time; this module adds an event-driven wrapper: whenever the engine
-frees a slot (or new requests arrive while slots are free), the waiting
-queue is RE-ANNEALED with Algorithm 1 — deadline slack shrinks as requests
-wait, so priorities must be recomputed, which the paper's decoupled design
-makes cheap (the global-budget anneal is ~ms).
+over time; whenever an instance frees a slot (or new requests arrive while
+slots are free), the waiting queue is RE-ANNEALED with Algorithm 1 —
+deadline slack shrinks as requests wait, so priorities must be recomputed.
+The incremental-Δ annealer (``objective.IncrementalEvaluator``) makes this
+cheap enough to run at every admission event.
 
-``simulate_online`` is a token-granularity discrete-event simulator with
-Poisson-ish arrivals: at each admission point the SLO-aware policy anneals
-the *remaining* queue (with SLOs tightened by elapsed waiting time) and
-admits the head; the FCFS policy admits in arrival order.
+The execution loop lives in :mod:`repro.core.events` (the unified
+discrete-event core): ``simulate_online`` is a thin wrapper that picks the
+admission policy (:class:`~repro.core.events.SLOReannealPolicy` or FCFS)
+and — new with the unified core — can spread arrivals over ``num_instances``
+parallel instances draining one shared queue.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-import numpy as np
-
-from repro.core.annealing import SAParams, priority_mapping
+from repro.core.annealing import SAParams
+from repro.core.events import (FCFSPolicy, SimResult,  # noqa: F401
+                               SLOReannealPolicy, _with_remaining_slo,
+                               simulate)
 from repro.core.latency_model import LinearLatencyModel
-from repro.core.simulator import SimResult
-from repro.core.slo import Request, as_arrays, meets_slo
-
-
-def _with_remaining_slo(r: Request, now: float) -> Request:
-    """Shift e2e/TTFT budgets by the time already waited."""
-    waited = max(0.0, now - r.arrival_time)
-    slo = r.slo
-    new = dataclasses.replace(
-        slo,
-        e2e=(slo.e2e - waited) if slo.e2e is not None else None,
-        ttft=(slo.ttft - waited) if slo.ttft is not None else None)
-    return dataclasses.replace(r, slo=new)
+from repro.core.slo import Request
 
 
 def simulate_online(requests: Sequence[Request], model: LinearLatencyModel,
                     max_batch: int, policy: str = "slo",
                     sa_params: Optional[SAParams] = None,
-                    reanneal_min_queue: int = 2) -> SimResult:
+                    reanneal_min_queue: int = 2,
+                    num_instances: int = 1) -> SimResult:
     """policy: "slo" (re-annealed priorities) or "fcfs".
 
     Requests carry ``arrival_time``; metrics are relative to arrival.
     """
-    sa_params = sa_params or SAParams(seed=0)
-    res = SimResult({}, {}, {}, {})
-    clock = 0.0
-    pending: List[Request] = []
-    future = sorted(requests, key=lambda r: r.arrival_time)
-    active = []
-
-    def admit_order():
-        if policy == "fcfs" or len(pending) < reanneal_min_queue:
-            return list(range(len(pending)))
-        shifted = [_with_remaining_slo(r, clock) for r in pending]
-        arrays = as_arrays(shifted)
-        sa = priority_mapping(arrays, model, max_batch, sa_params)
-        return list(sa.perm)
-
-    while future or pending or active:
-        # move arrivals whose time has come
-        while future and future[0].arrival_time <= clock:
-            pending.append(future.pop(0))
-        # admit in policy order
-        free = max_batch - len(active)
-        if free > 0 and pending:
-            order = admit_order()
-            take = order[:free]
-            admitted = [pending[i] for i in take]
-            for i in sorted(take, reverse=True):
-                pending.pop(i)
-            b = len(admitted)
-            pf = max(model.prefill_time(b, r.input_len) for r in admitted)
-            clock += pf
-            for r in admitted:
-                lo = r.output_len if r.output_len is not None \
-                    else r.planning_output_len()
-                active.append({"req": r, "accum": r.input_len,
-                               "remaining": max(int(lo), 1), "ttft": clock,
-                               "gen": 0})
-        if not active:
-            if future:
-                clock = max(clock, future[0].arrival_time)
-            continue
-        b = len(active)
-        step = max(model.per_token_decode_time(b, a["accum"])
-                   for a in active)
-        clock += step
-        done = [a for a in active if a["remaining"] <= 1]
-        for a in active:
-            a["accum"] += 1
-            a["gen"] += 1
-            a["remaining"] -= 1
-        for a in done:
-            active.remove(a)
-            r = a["req"]
-            e2e = clock - r.arrival_time
-            ttft = a["ttft"] - r.arrival_time
-            tpot = (clock - a["ttft"]) / max(a["gen"], 1)
-            res.e2e[r.req_id] = e2e
-            res.ttft[r.req_id] = ttft
-            res.tpot[r.req_id] = tpot
-            res.met[r.req_id] = meets_slo(r, e2e, ttft, tpot)
-    return res
+    if policy == "fcfs":
+        pol = FCFSPolicy()
+    else:
+        pol = SLOReannealPolicy(model, max_batch,
+                                sa_params if sa_params is not None
+                                else SAParams(seed=0),
+                                min_queue=reanneal_min_queue)
+    return simulate(requests, model, max_batch, pol,
+                    num_instances=num_instances, respect_arrivals=True)

@@ -59,7 +59,7 @@ class SLOAwareScheduler:
                  max_batch: int = 8,
                  memory: Optional[MemoryModel] = None,
                  output_predictor: Optional[OutputLengthPredictor] = None,
-                 sa_params: SAParams = SAParams(),
+                 sa_params: Optional[SAParams] = None,
                  use_jax: bool = False):
         self.model = model
         self.num_instances = num_instances
@@ -67,7 +67,9 @@ class SLOAwareScheduler:
         self.memory = memory or MemoryModel(total_memory=float("inf"),
                                             mu=0.9, sigma_per_token=1.0)
         self.output_predictor = output_predictor
-        self.sa_params = sa_params
+        # None sentinel: a module-level SAParams() default would be one
+        # shared mutable instance across every scheduler ever constructed
+        self.sa_params = sa_params if sa_params is not None else SAParams()
         self.use_jax = use_jax
 
     # ------------------------------------------------ instance assignment

@@ -1,69 +1,33 @@
-"""Discrete-event execution simulator.
+"""Offline execution wrappers over the unified discrete-event core.
 
 Benchmarks compare scheduling policies by *executing* schedules against
 actual output lengths (the planner only saw predictions) using the fitted
 latency model plus optional multiplicative noise — mirroring the paper's
 experimental gap between predicted and measured latencies.
 
-Two execution models:
-  * ``run_planned``  — the SLO-aware path: the scheduler's batches run
-    sequentially per instance (requests in a batch are dispatched together;
-    a batch ends when its slowest member finishes).
-  * ``run_fcfs_continuous`` — the vLLM-like baseline: FCFS admission with
-    continuous batching at token granularity; prefills stall the running
-    batch (non-chunked), decode steps take the max per-token time of the
-    active set.
+All execution loops live in :mod:`repro.core.events` (one token-granular
+simulator, engine-faithful first-token accounting); this module keeps the
+historical entry points as thin wrappers:
+
+  * ``run_planned``  — the SLO-aware lock-step path: the scheduler's
+    batches run sequentially per instance (a batch is admitted together
+    and the next batch waits until the previous one drained).
+  * ``run_priority_continuous`` — planned priority order fed to a
+    continuously-batching engine (the paper's actual dispatch, §5.1).
+  * ``run_fcfs_continuous`` — the vLLM-like FCFS baseline.
+  * ``run_multi_instance`` — planned batches across parallel instances.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.events import (AdmissionPolicy, FCFSPolicy,  # noqa: F401
+                               PlannedPolicy, SimResult,
+                               SLOReannealPolicy, simulate)
 from repro.core.latency_model import LinearLatencyModel
-from repro.core.slo import Request, meets_slo
-
-
-@dataclasses.dataclass
-class SimResult:
-    e2e: Dict[int, float]
-    ttft: Dict[int, float]
-    tpot: Dict[int, float]
-    met: Dict[int, bool]
-
-    @property
-    def n(self):
-        return len(self.e2e)
-
-    @property
-    def attainment(self) -> float:
-        return sum(self.met.values()) / max(self.n, 1)
-
-    @property
-    def total_latency(self) -> float:
-        return sum(self.e2e.values())
-
-    @property
-    def avg_latency(self) -> float:
-        return self.total_latency / max(self.n, 1)
-
-    @property
-    def G(self) -> float:
-        t = self.total_latency
-        return sum(self.met.values()) / t if t > 0 else 0.0
-
-    def merged_with(self, other: "SimResult") -> "SimResult":
-        return SimResult(e2e={**self.e2e, **other.e2e},
-                         ttft={**self.ttft, **other.ttft},
-                         tpot={**self.tpot, **other.tpot},
-                         met={**self.met, **other.met})
-
-
-def _noise(rng: Optional[np.random.Generator], sigma: float) -> float:
-    if rng is None or sigma <= 0:
-        return 1.0
-    return float(np.exp(rng.normal(0.0, sigma)))
+from repro.core.slo import Request
 
 
 def run_planned(batches: Sequence[Sequence[Request]],
@@ -72,27 +36,12 @@ def run_planned(batches: Sequence[Sequence[Request]],
                 rng: Optional[np.random.Generator] = None,
                 inter_batch_gap: float = 1e-4) -> SimResult:
     """Execute planned batches sequentially on one instance."""
-    clock = 0.0
-    res = SimResult({}, {}, {}, {})
-    for batch in batches:
-        if not batch:
-            continue
-        b = len(batch)
-        durs = []
-        for r in batch:
-            lo = r.output_len if r.output_len is not None \
-                else r.planning_output_len()
-            t_p = model.prefill_time(b, r.input_len) * _noise(rng, noise_sigma)
-            t_d = model.decode_time(b, r.input_len, lo) * _noise(rng, noise_sigma)
-            ttft = clock + t_p
-            e2e = clock + t_p + t_d
-            res.ttft[r.req_id] = ttft
-            res.e2e[r.req_id] = e2e
-            res.tpot[r.req_id] = t_d / max(lo, 1)
-            res.met[r.req_id] = meets_slo(r, e2e, ttft, res.tpot[r.req_id])
-            durs.append(t_p + t_d)
-        clock += max(durs) + inter_batch_gap
-    return res
+    batches = [list(b) for b in batches if len(b)]
+    ordered = [r for b in batches for r in b]
+    max_batch = max((len(b) for b in batches), default=1)
+    return simulate(ordered, model, max_batch, PlannedPolicy(batches),
+                    noise_sigma=noise_sigma, rng=rng,
+                    respect_arrivals=False, inter_batch_gap=inter_batch_gap)
 
 
 def run_multi_instance(queues, model: LinearLatencyModel,
@@ -129,47 +78,6 @@ def run_fcfs_continuous(requests: Sequence[Request],
                         rng: Optional[np.random.Generator] = None
                         ) -> SimResult:
     """vLLM-like FCFS + continuous batching baseline on one instance."""
-    res = SimResult({}, {}, {}, {})
-    clock = 0.0
-    pending = list(requests)
-    active = []          # dicts: req, accum, remaining, ttft_time, start
-
-    while pending or active:
-        # admission: fill free slots; prefill stalls the batch
-        admitted = []
-        while pending and len(active) + len(admitted) < max_batch:
-            admitted.append(pending.pop(0))
-        if admitted:
-            b = len(admitted)
-            pf = [model.prefill_time(b, r.input_len) * _noise(rng, noise_sigma)
-                  for r in admitted]
-            clock += max(pf)
-            for r in admitted:
-                lo = r.output_len if r.output_len is not None \
-                    else r.planning_output_len()
-                active.append({"req": r, "accum": r.input_len,
-                               "remaining": max(int(lo), 1),
-                               "ttft": clock, "gen": 0})
-        if not active:
-            continue
-        # one decode iteration for the whole active set
-        b = len(active)
-        step = max(model.per_token_decode_time(b, a["accum"])
-                   for a in active) * _noise(rng, noise_sigma)
-        clock += step
-        done = []
-        for a in active:
-            a["accum"] += 1
-            a["gen"] += 1
-            a["remaining"] -= 1
-            if a["remaining"] <= 0:
-                done.append(a)
-        for a in done:
-            active.remove(a)
-            r = a["req"]
-            res.ttft[r.req_id] = a["ttft"]
-            res.e2e[r.req_id] = clock
-            res.tpot[r.req_id] = (clock - a["ttft"]) / max(a["gen"], 1)
-            res.met[r.req_id] = meets_slo(r, clock, a["ttft"],
-                                          res.tpot[r.req_id])
-    return res
+    return simulate(requests, model, max_batch, "fcfs",
+                    noise_sigma=noise_sigma, rng=rng,
+                    respect_arrivals=False)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.events import AdmissionPolicy, FCFSPolicy, PlannedPolicy
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import meets_slo
 from repro.engine.request import Phase, RuntimeRequest
@@ -219,38 +220,53 @@ class Engine:
                 self._push_token(rt, int(toks[i]))
 
     # ------------------------------------------------------------ runs
-    def run_fcfs(self, rts: Sequence[RuntimeRequest]):
-        """Continuous batching, FCFS admission."""
+    def run_policy(self, rts: Sequence[RuntimeRequest],
+                   policy: AdmissionPolicy):
+        """Continuous batching with pluggable admission — the *same*
+        ``AdmissionPolicy`` objects that drive the discrete-event core
+        (``repro.core.events.simulate``), so simulated and real runs share
+        one scheduling brain."""
+        rts = list(rts)
         waiting = list(rts)
         for rt in waiting:
             rt.submit_time = self.clock
         while waiting or not all(self.slot_free):
             free = self.free_slots()
-            while waiting and free:
-                self.prefill(waiting.pop(0), free.pop(0))
+            admitted = False
+            if waiting and free:
+                active_count = self.max_slots - len(free)
+                sel = list(policy.select([rt.request for rt in waiting],
+                                         self.clock, len(free),
+                                         active_count))[:len(free)]
+                chosen = [waiting[j] for j in sel]
+                for j in sorted(sel, reverse=True):
+                    waiting.pop(j)
+                for rt, slot in zip(chosen, free):
+                    self.prefill(rt, slot)
+                admitted = bool(chosen)
+            idle = all(self.slot_free)
             self.decode_round()
+            if waiting and idle and not admitted:
+                raise RuntimeError("admission stalled: policy admitted "
+                                   "nothing while the engine was idle")
         return self._collect(rts)
+
+    def run_fcfs(self, rts: Sequence[RuntimeRequest]):
+        """Continuous batching, FCFS admission."""
+        return self.run_policy(rts, FCFSPolicy())
 
     def run_priority(self, batches: Sequence[Sequence[RuntimeRequest]]):
         """Continuous batching with the planned priority order as arrival
         order — the paper's actual dispatch (§5.1: batches submitted 0.1 ms
         apart into a continuously-batching engine)."""
-        return self.run_fcfs([rt for b in batches for rt in b])
+        return self.run_policy([rt for b in batches for rt in b],
+                               FCFSPolicy())
 
     def run_planned(self, batches: Sequence[Sequence[RuntimeRequest]]):
-        """Execute scheduler-planned batches sequentially."""
+        """Execute scheduler-planned batches sequentially (barrier between
+        batches, enforced by ``PlannedPolicy``)."""
         allr = [rt for b in batches for rt in b]
-        for rt in allr:
-            rt.submit_time = self.clock
-        for batch in batches:
-            for rt in batch:
-                free = self.free_slots()
-                if not free:
-                    raise RuntimeError("slot pool smaller than planned batch")
-                self.prefill(rt, free[0])
-            while not all(self.slot_free):
-                self.decode_round()
-        return self._collect(allr)
+        return self.run_policy(allr, PlannedPolicy(batches))
 
     def _collect(self, rts):
         out = {}

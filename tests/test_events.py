@@ -1,0 +1,291 @@
+"""Unified discrete-event core: wrapper routing, engine-faithful
+first-token accounting (regression for the historical simulator/engine
+drift), multi-instance online scheduling, incremental-ΔG agreement, and
+the annealer's symmetric early exits."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_TABLE2, FCFSPolicy, IncrementalEvaluator,
+                        PlannedPolicy, SAParams, as_arrays, evaluate,
+                        fcfs_schedule, priority_mapping, run_fcfs_continuous,
+                        run_planned, run_priority_continuous, simulate)
+from repro.core.annealing import _to_arrays, _to_batches, apply_move, \
+    propose_move
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.online import simulate_online
+from repro.core.slo import SLO, Request
+from repro.data.synthetic import sample_requests
+
+# prefill = 0.5 s, per-token decode = 0.25 s (b- and length-independent)
+CONST = LinearLatencyModel(0, 0, 0, 0.5, 0, 0, 0, 0.25)
+# per-token decode = current context length (exposes the accum trajectory)
+ACCUM = LinearLatencyModel(0, 0, 0, 0.5, 0, 0, 1.0, 0)
+
+
+def _req(i, li, lo, slo=None, arrival=0.0):
+    return Request(i, "chat", li, slo or SLO(ttft=1e6, tpot=1e6),
+                   output_len=lo, arrival_time=arrival)
+
+
+# ------------------------------------------------------- token accounting
+def test_first_token_comes_from_prefill():
+    """TTFT is the first token, so lo=5 needs exactly 4 decode rounds and
+    TPOT divides by all 5 generated tokens (engine semantics)."""
+    sim = run_fcfs_continuous([_req(0, 10, 5)], CONST, max_batch=4)
+    assert sim.ttft[0] == pytest.approx(0.5)
+    assert sim.e2e[0] == pytest.approx(0.5 + 4 * 0.25)
+    assert sim.tpot[0] == pytest.approx((sim.e2e[0] - sim.ttft[0]) / 5)
+
+
+def test_single_token_request_finishes_at_prefill():
+    sim = run_fcfs_continuous([_req(0, 10, 1)], CONST, max_batch=4)
+    assert sim.e2e[0] == pytest.approx(sim.ttft[0]) == pytest.approx(0.5)
+    assert sim.tpot[0] == 0.0
+
+
+def test_decode_context_starts_after_first_token():
+    """Decode rounds see context l_i + gen: for li=10, lo=5 the per-token
+    times are 11+12+13+14 (not 10..13, the pre-unification off-by-one)."""
+    sim = run_fcfs_continuous([_req(0, 10, 5)], ACCUM, max_batch=4)
+    assert sim.e2e[0] - sim.ttft[0] == pytest.approx(11 + 12 + 13 + 14)
+
+
+def test_engine_first_token_accounting_matches_core():
+    """Regression: the real engine and the event core agree that a request
+    with l_o generated tokens runs l_o - 1 decode rounds after prefill."""
+    jax = pytest.importorskip("jax")
+    from repro.core.profiler import LatencyProfiler
+    from repro.engine.engine import Engine
+    from repro.engine.request import RuntimeRequest
+    from repro.models import ModelConfig, init_params
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prof = LatencyProfiler()
+    eng = Engine(cfg, params, max_slots=1, max_seq_len=128, profiler=prof)
+    rng = np.random.default_rng(0)
+    rt = RuntimeRequest(request=_req(0, 12, 5),
+                        prompt_tokens=rng.integers(0, 128, 12).astype(
+                            np.int32),
+                        max_new_tokens=5)
+    out = eng.run_fcfs([rt])[0]
+    assert len(out["tokens"]) == 5
+    assert len(prof.prefill_samples) == 1
+    assert len(prof.decode_samples) == 4          # lo - 1 decode rounds
+    assert out["tpot"] == pytest.approx((out["e2e"] - out["ttft"]) / 5)
+    # the event core, driven by the same numbers, mirrors the structure
+    sim = run_fcfs_continuous([_req(0, 12, 5)], CONST, max_batch=1)
+    assert (sim.e2e[0] - sim.ttft[0]) / 0.25 == pytest.approx(4)
+
+
+# --------------------------------------------------------- wrapper routing
+def test_priority_continuous_equals_fcfs_on_flat_order():
+    reqs = sample_requests(12, seed=0)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    batches = [reqs[i:i + 3] for i in range(0, 12, 3)]
+    a = run_priority_continuous(batches, PAPER_TABLE2, 3)
+    b = run_fcfs_continuous([r for bt in batches for r in bt],
+                            PAPER_TABLE2, 3)
+    assert a.e2e == b.e2e and a.ttft == b.ttft and a.met == b.met
+
+
+def test_planned_barrier_between_batches():
+    reqs = [_req(i, 10, 3) for i in range(4)]
+    sim = run_planned([reqs[:2], reqs[2:]], CONST, inter_batch_gap=0.0)
+    end_b1 = max(sim.e2e[0], sim.e2e[1])
+    start_b2 = min(sim.ttft[2], sim.ttft[3]) - 0.5   # minus prefill
+    assert start_b2 == pytest.approx(end_b1)
+
+
+def test_planned_raises_when_batch_exceeds_slots():
+    reqs = [_req(i, 10, 3) for i in range(3)]
+    with pytest.raises(RuntimeError):
+        simulate(reqs, CONST, 2, PlannedPolicy([[0, 1, 2]]),
+                 respect_arrivals=False)
+
+
+# ------------------------------------------------------------ multi-instance
+def test_multi_instance_online_completes_and_speeds_up():
+    rng = np.random.default_rng(5)
+    reqs = sample_requests(20, seed=6)
+    t = 0.0
+    for r in reqs:
+        t += rng.exponential(0.2)
+        r.arrival_time = t
+        r.predicted_output_len = r.output_len
+    one = simulate_online(reqs, PAPER_TABLE2, 4, "fcfs")
+    two = simulate_online(reqs, PAPER_TABLE2, 4, "fcfs", num_instances=2)
+    assert one.n == two.n == 20
+    mk1 = max(one.e2e[r.req_id] + r.arrival_time for r in reqs)
+    mk2 = max(two.e2e[r.req_id] + r.arrival_time for r in reqs)
+    assert mk2 <= mk1 * 1.01
+    # re-annealed admission also runs multi-instance
+    slo2 = simulate_online(reqs, PAPER_TABLE2, 4, "slo",
+                           SAParams(seed=0), num_instances=2)
+    assert slo2.n == 20
+    assert slo2.attainment >= two.attainment * 0.9
+
+
+def test_idle_instance_does_not_deadlock():
+    # 1 request, 3 instances: two instances never get work
+    sim = simulate([_req(0, 10, 3, arrival=1.0)], CONST, 2, "fcfs",
+                   num_instances=3)
+    assert sim.n == 1
+    assert sim.ttft[0] == pytest.approx(0.5)      # arrival-relative
+
+
+# --------------------------------------------------- incremental ΔG (unit)
+def _agreement_run(reqs, max_batch, seed, steps=60):
+    arrays = as_arrays(reqs)
+    n = len(reqs)
+    inc = IncrementalEvaluator(arrays, PAPER_TABLE2,
+                               _to_batches(*fcfs_schedule(n, max_batch)))
+    rng = random.Random(seed)
+    checked = 0
+    for _ in range(steps):
+        move = propose_move(inc.batches, max_batch, rng)
+        if move is None:
+            continue
+        g, n_met, staged = inc.preview(move)
+        cand = apply_move(inc.batches, move)
+        assert cand == staged[0]
+        ev = evaluate(arrays, PAPER_TABLE2, *_to_arrays(cand))
+        assert abs(ev.G - g) <= 1e-9 * max(1.0, abs(ev.G))
+        assert ev.n_met == n_met
+        checked += 1
+        if rng.random() < 0.5:
+            inc.commit(staged)
+    assert checked > 10
+
+
+def test_incremental_matches_evaluate_h1_only():
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, "code", int(rng.integers(16, 900)),
+                    SLO(e2e=float(rng.uniform(1, 40))),
+                    output_len=int(rng.integers(4, 500)))
+            for i in range(18)]
+    for seed in range(3):
+        _agreement_run(reqs, 4, seed)
+
+
+def test_incremental_matches_evaluate_h0_only():
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, "chat", int(rng.integers(16, 900)),
+                    SLO(ttft=float(rng.uniform(0.5, 15)),
+                        tpot=float(rng.uniform(0.01, 0.3))),
+                    output_len=int(rng.integers(4, 500)))
+            for i in range(18)]
+    for seed in range(3):
+        _agreement_run(reqs, 3, seed)
+
+
+def test_incremental_matches_evaluate_mixed():
+    reqs = sample_requests(22, seed=9)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    for seed in range(3):
+        _agreement_run(reqs, 5, seed)
+
+
+def test_delay_on_singleton_last_batch_is_noop():
+    """Regression: delaying the only member of the last batch must not
+    leave an empty batch behind (its -inf duration would zero all
+    downstream waits and mark everything met)."""
+    reqs = [_req(i, 20, 10, SLO(ttft=0.01, tpot=1e-9)) for i in range(3)]
+    arrays = as_arrays(reqs)
+    inc = IncrementalEvaluator(arrays, PAPER_TABLE2, [[0, 1], [2]])
+    move = ("delay", 1, 0)
+    g, n_met, staged = inc.preview(move)
+    assert staged[0] == [[0, 1], [2]] == apply_move([[0, 1], [2]], move)
+    ev = evaluate(arrays, PAPER_TABLE2, *_to_arrays(staged[0]))
+    assert (g, n_met) == (ev.G, ev.n_met)
+
+
+def test_incremental_matches_evaluate_zero_output_len():
+    """Regression: ``model.tpot`` clamps l_o to 1 before recomputing the
+    decode time, so a l_o=0 request's TPOT is NOT zero — the incremental
+    coefficients must clamp identically or h=0 met-flags diverge."""
+    reqs = [
+        Request(0, "chat", 100, SLO(ttft=10.0, tpot=1e-6), output_len=0),
+        Request(1, "chat", 50, SLO(ttft=10.0, tpot=1.0), output_len=0),
+        Request(2, "code", 80, SLO(e2e=30.0), output_len=0),
+        Request(3, "chat", 60, SLO(ttft=5.0, tpot=0.05), output_len=7),
+    ]
+    arrays = as_arrays(reqs)
+    perm, bid = fcfs_schedule(4, 2)
+    inc = IncrementalEvaluator(arrays, PAPER_TABLE2, _to_batches(perm, bid))
+    ev = evaluate(arrays, PAPER_TABLE2, perm, bid)
+    assert inc.n_met == ev.n_met
+    assert abs(inc.G - ev.G) <= 1e-9 * max(1.0, abs(ev.G))
+    _agreement_run(reqs, 2, 0, steps=40)
+
+
+# --------------------------------------------------------- annealer exits
+def test_fcfs_start_early_exit():
+    """Symmetric line-7 check: the e2e-sorted start misses an SLO but the
+    FCFS order meets every SLO → the annealer must return it immediately."""
+    model = LinearLatencyModel(0, 0, 1.0, 0, 0, 0, 0, 1.0)
+    reqs = [
+        Request(0, "chat", 10, SLO(ttft=10.5, tpot=2.0), output_len=1),
+        Request(1, "chat", 1, SLO(ttft=20.0, tpot=2.0), output_len=5),
+    ]
+    arrays = as_arrays(reqs)
+    res = priority_mapping(arrays, model, 1, SAParams(seed=0))
+    assert res.early_exit
+    assert res.perm.tolist() == [0, 1]            # the FCFS order
+    assert evaluate(arrays, model, res.perm, res.batch_id).n_met == 2
+
+
+def test_mid_anneal_early_exit_when_all_met():
+    """Paper Fig. 3 workload: neither start meets all SLOs, but the
+    SLO-aware order does — the anneal stops as soon as it finds it."""
+    model = LinearLatencyModel(0, 0, 0, 0, 0, 0, 0, 1e-3)
+    reqs = [
+        Request(0, "code", 1, SLO(e2e=0.8), output_len=300),
+        Request(1, "code", 1, SLO(e2e=0.5), output_len=500),
+        Request(2, "code", 1, SLO(e2e=1.8), output_len=800),
+    ]
+    arrays = as_arrays(reqs)
+    res = priority_mapping(arrays, model, 1, SAParams(seed=0))
+    assert res.early_exit
+    assert evaluate(arrays, model, res.perm, res.batch_id).n_met == 3
+
+
+def test_saparams_default_is_none_sentinel():
+    """Regression for the shared-mutable-default bug: one module-level
+    SAParams() instance used to be shared across every caller."""
+    import inspect
+
+    from repro.core.scheduler import SLOAwareScheduler
+    assert inspect.signature(priority_mapping) \
+        .parameters["params"].default is None
+    assert inspect.signature(SLOAwareScheduler.__init__) \
+        .parameters["sa_params"].default is None
+    s1 = SLOAwareScheduler(PAPER_TABLE2)
+    s2 = SLOAwareScheduler(PAPER_TABLE2)
+    assert s1.sa_params is not s2.sa_params
+
+
+def test_incremental_and_oracle_paths_reach_same_quality():
+    reqs = sample_requests(14, seed=21)
+    import dataclasses
+    for r in reqs:
+        r.slo = dataclasses.replace(
+            r.slo,
+            e2e=r.slo.e2e * 0.2 if r.slo.e2e else None,
+            ttft=r.slo.ttft * 0.02 if r.slo.ttft else None,
+            tpot=r.slo.tpot * 0.5 if r.slo.tpot else None)
+        r.predicted_output_len = r.output_len
+    arrays = as_arrays(reqs)
+    ri = priority_mapping(arrays, PAPER_TABLE2, 4, SAParams(seed=3))
+    rf = priority_mapping(arrays, PAPER_TABLE2, 4,
+                          SAParams(seed=3, incremental=False))
+    # identical rng trajectory + scoring that agrees to ~1e-15 ⇒ the two
+    # paths walk the same accept/reject sequence
+    assert ri.perm.tolist() == rf.perm.tolist()
+    assert ri.batch_id.tolist() == rf.batch_id.tolist()
+    assert ri.G == pytest.approx(rf.G, abs=1e-12)
