@@ -4,6 +4,10 @@ Requests are assigned round-robin to the instance with the largest
 remaining memory (Eq. 20 token accounting), priority-mapped independently
 per instance (embarrassingly parallel), and dispatched.
 
+The planned schedule is also scored through the event core under both
+execution disciplines (stalling vs Sarathi-style chunked prefill) before
+dispatch — scheduling API v2.
+
 Run:  PYTHONPATH=src python examples/multi_instance.py [--instances 4]
 """
 import argparse
@@ -48,6 +52,12 @@ def main():
     print(f"\noverall G={met / tot if tot else 0:.4f}  "
           f"scheduling overhead={dt * 1e3:.2f} ms "
           f"({args.instances} instances, sequential host)")
+
+    # score the same plan under both execution disciplines (API v2)
+    for disc in ("stall", "chunked:32"):
+        ev = sched.evaluate_plan(outcome, discipline=disc)
+        print(f"plan under {disc:<10}: G={ev.G:.4f} "
+              f"attainment={ev.attainment:.2f}")
 
     # FCFS baseline with the same round-robin split
     met = tot = 0

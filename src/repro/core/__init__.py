@@ -4,6 +4,28 @@ Components: latency predictor (Eqs. 14-19), request profiler, simulated-
 annealing priority mapper (Algorithm 1), multi-instance scheduler
 (Algorithm 2), objective G (Eq. 2), exhaustive-search oracle, and the
 discrete-event execution simulator used by the benchmarks.
+
+Scheduling API v2 (:mod:`repro.core.policies`): runtime scheduling is
+expressed as two composable abstractions shared verbatim by the
+discrete-event core (:func:`repro.core.events.simulate`) and the real
+serving engine (``Engine.run_policy``):
+
+  * :class:`SchedulingPolicy` — ``decide(view) -> Decision``: sees the
+    pending queue *and* the active set (generated/remaining/slack under
+    the latency model) and may both admit and **preempt**.  Built-ins:
+    :class:`FCFSPolicy`, :class:`PlannedPolicy`,
+    :class:`SLOReannealPolicy`, :class:`SLOPreemptPolicy`.
+  * :class:`ExecutionDiscipline` — :class:`StallingPrefill` vs
+    :class:`ChunkedPrefill` — how admitted prefills interleave with
+    running decode rounds.
+
+Both are constructible from string keys via :func:`repro.core.policies.make`
+(e.g. ``make("slo-preempt", model=m)``, ``make("chunked:64")``).
+
+Deprecation path: the v1 ``AdmissionPolicy`` (admit-only
+``select(pending, now, free, active_count)``) remains importable for one
+release; subclasses and duck-typed ``select`` objects are adapted into
+the v2 protocol automatically, with a ``DeprecationWarning``.
 """
 from repro.core.slo import SLO, Request, as_arrays, meets_slo
 from repro.core.latency_model import LinearLatencyModel, PAPER_TABLE2, fit
@@ -15,10 +37,15 @@ from repro.core.annealing import (SAParams, SAResult, apply_move,
 from repro.core.exhaustive import exhaustive_search
 from repro.core.profiler import (LatencyProfiler, MemoryModel,
                                  OutputLengthPredictor)
+from repro.core.policies import (ActiveView, AdmissionPolicy, ChunkedPrefill,
+                                 Decision, ExecutionDiscipline, FCFSPolicy,
+                                 PlannedPolicy, SchedulerView,
+                                 SchedulingPolicy, SLOPreemptPolicy,
+                                 SLOReannealPolicy, StallingPrefill,
+                                 as_scheduling_policy, make, make_discipline)
 from repro.core.scheduler import (InstanceQueue, ScheduleOutcome,
                                   SLOAwareScheduler)
-from repro.core.events import (AdmissionPolicy, FCFSPolicy, PlannedPolicy,
-                               SimResult, SLOReannealPolicy, simulate)
+from repro.core.events import SimResult, simulate
 from repro.core.simulator import (run_fcfs_continuous, run_multi_instance,
                                   run_planned, run_priority_continuous)
 from repro.core.online import simulate_online
@@ -32,7 +59,13 @@ __all__ = [
     "exhaustive_search",
     "LatencyProfiler", "MemoryModel", "OutputLengthPredictor",
     "InstanceQueue", "ScheduleOutcome", "SLOAwareScheduler",
-    "AdmissionPolicy", "FCFSPolicy", "PlannedPolicy", "SLOReannealPolicy",
+    # scheduling API v2
+    "SchedulingPolicy", "SchedulerView", "ActiveView", "Decision",
+    "FCFSPolicy", "PlannedPolicy", "SLOReannealPolicy", "SLOPreemptPolicy",
+    "ExecutionDiscipline", "StallingPrefill", "ChunkedPrefill",
+    "make", "make_discipline", "as_scheduling_policy",
+    # v1 deprecation shim
+    "AdmissionPolicy",
     "simulate", "simulate_online",
     "SimResult", "run_fcfs_continuous", "run_multi_instance", "run_planned",
     "run_priority_continuous",

@@ -1,4 +1,4 @@
-"""Unified discrete-event serving core.
+"""Unified discrete-event serving core (scheduling API v2).
 
 Historically this repo carried *three* hand-rolled continuous-batching
 loops — ``online.simulate_online``, ``simulator.run_fcfs_continuous`` (and
@@ -8,33 +8,47 @@ from the prefill logits (TTFT *is* the first generated token, so a request
 needs ``l_o - 1`` decode rounds), while both simulators required ``l_o``
 decode rounds after TTFT and computed TPOT over a different token count.
 
-This module is now the single execution loop.  ``simulate`` is a
-token-granularity discrete-event simulator with
+This module is the single execution loop.  ``simulate`` is a
+token-granularity discrete-event simulator driven by the two v2
+scheduling abstractions from :mod:`repro.core.policies`:
 
-  * pluggable admission policies (:class:`FCFSPolicy`,
-    :class:`PlannedPolicy`, :class:`SLOReannealPolicy`) — the *same*
-    policy objects also drive the real engine's admission
-    (``Engine.run_policy``), so simulated and measured runs share one
-    scheduling brain;
-  * multi-instance support: ``num_instances`` servers draining a shared
-    pending queue (instances advance asynchronously; the earliest-clock
-    instance always acts first, so arrival causality is preserved);
-  * arrivals over time (``respect_arrivals=True``) or a classic offline
-    pool (all requests available at t=0).
+  * :class:`~repro.core.policies.SchedulingPolicy` — at every scheduling
+    event the policy receives a :class:`~repro.core.policies.SchedulerView`
+    (pending queue, active set with generated/remaining/slack, instance
+    id, clock, free slots) and returns a
+    :class:`~repro.core.policies.Decision` with ``admit`` *and*
+    ``preempt`` lists.  Preempted requests return to pending with KV
+    discarded; re-admission re-prefills prompt + generated tokens
+    (recompute cost charged).  Built-ins: ``FCFSPolicy``,
+    ``PlannedPolicy``, ``SLOReannealPolicy``, ``SLOPreemptPolicy``.  The
+    *same* policy objects drive the real engine (``Engine.run_policy``),
+    so simulated and measured runs share one scheduling brain.
+  * :class:`~repro.core.policies.ExecutionDiscipline` — how admitted
+    prefills interleave with decode rounds: ``StallingPrefill`` (batched
+    whole-prompt prefill, running decodes stall) or
+    ``ChunkedPrefill(chunk_size)`` (slot-by-slot Sarathi-style chunking;
+    running decodes advance one round between chunks, mirroring the
+    engine's chunked path).
+
+The v1 ``AdmissionPolicy.select`` protocol still works through a
+deprecation shim (see :mod:`repro.core.policies`); new code should
+implement ``decide(view)``.
 
 Execution semantics (engine-faithful — the fix for the historical drift):
 
-  * prefill of an admitted set is batched: it completes at
-    ``clock + max(member prefill times)``; that instant is TTFT *and* the
-    first generated token (``gen = 1``, context length ``l_i + 1``);
+  * prefill of an admitted set under ``StallingPrefill`` is batched: it
+    completes at ``clock + max(member prefill times)``; that instant is
+    TTFT *and* the first generated token (``gen = 1``); under
+    ``ChunkedPrefill`` each admitted request prefills slot-by-slot in
+    chunks, with one decode round for the running batch between chunks;
   * each decode round generates one token for every active request and
     costs the max per-token decode time over the active set; a request
     finishes once ``gen == l_o`` — i.e. ``l_o - 1`` decode rounds after
     prefill (a request with ``l_o == 1`` finishes at prefill);
   * TPOT = (e2e − TTFT) / l_o, matching ``RuntimeRequest.metrics``;
-  * prefills stall the instance's running decodes (non-chunked), and the
-    prefill batch size is the admitted-set size (simulator convention —
-    the engine prefills slot-by-slot; see ``engine.py``).
+  * a preempted request keeps its generated tokens and its original
+    TTFT; on re-admission the prefill length is ``l_i + generated``
+    (vLLM-style recompute) and the prefill emits the next token.
 """
 from __future__ import annotations
 
@@ -43,9 +57,17 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.annealing import SAParams, priority_mapping
+from repro.core.annealing import SAParams
 from repro.core.latency_model import LinearLatencyModel
-from repro.core.slo import Request, as_arrays, meets_slo
+# AdmissionPolicy/FCFSPolicy/PlannedPolicy/SLOReannealPolicy are
+# re-exported here for v1 import compatibility (simulator.py, online.py)
+from repro.core.policies import (AdmissionPolicy, ExecutionDiscipline,  # noqa: F401
+                                 FCFSPolicy, PlannedPolicy,  # noqa: F401
+                                 SchedulerView, SchedulingPolicy,
+                                 SLOReannealPolicy,  # noqa: F401
+                                 make_active_view, make_discipline,
+                                 normalize_decision, resolve_policy)
+from repro.core.slo import Request, meets_slo
 
 
 @dataclasses.dataclass
@@ -54,6 +76,7 @@ class SimResult:
     ttft: Dict[int, float]
     tpot: Dict[int, float]
     met: Dict[int, bool]
+    preemptions: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def n(self):
@@ -72,6 +95,10 @@ class SimResult:
         return self.total_latency / max(self.n, 1)
 
     @property
+    def n_preempted(self) -> int:
+        return sum(self.preemptions.values())
+
+    @property
     def G(self) -> float:
         t = self.total_latency
         return sum(self.met.values()) / t if t > 0 else 0.0
@@ -80,111 +107,15 @@ class SimResult:
         return SimResult(e2e={**self.e2e, **other.e2e},
                          ttft={**self.ttft, **other.ttft},
                          tpot={**self.tpot, **other.tpot},
-                         met={**self.met, **other.met})
+                         met={**self.met, **other.met},
+                         preemptions={**self.preemptions,
+                                      **other.preemptions})
 
 
 def _noise(rng: Optional[np.random.Generator], sigma: float) -> float:
     if rng is None or sigma <= 0:
         return 1.0
     return float(np.exp(rng.normal(0.0, sigma)))
-
-
-def _with_remaining_slo(r: Request, now: float) -> Request:
-    """Shift e2e/TTFT budgets by the time already waited."""
-    waited = max(0.0, now - r.arrival_time)
-    slo = r.slo
-    new = dataclasses.replace(
-        slo,
-        e2e=(slo.e2e - waited) if slo.e2e is not None else None,
-        ttft=(slo.ttft - waited) if slo.ttft is not None else None)
-    return dataclasses.replace(r, slo=new)
-
-
-# --------------------------------------------------------------- policies
-class AdmissionPolicy:
-    """Decides which pending requests an instance admits next.
-
-    ``select`` returns indices into ``pending`` in admission order; the
-    caller truncates to the available slots.  The same objects drive both
-    the discrete-event core (`simulate`) and the real serving engine
-    (``Engine.run_policy``).
-    """
-
-    def select(self, pending: Sequence[Request], now: float, free: int,
-               active_count: int) -> List[int]:
-        raise NotImplementedError
-
-
-class FCFSPolicy(AdmissionPolicy):
-    """vLLM-like continuous batching: admit in arrival (list) order.
-
-    Also serves the planned-*priority* path: the scheduler's priority
-    order is applied upstream by flattening the planned batches."""
-
-    def select(self, pending, now, free, active_count):
-        return list(range(min(free, len(pending))))
-
-
-class PlannedPolicy(AdmissionPolicy):
-    """Execute planned batches sequentially with a barrier (the paper's
-    dispatch discipline): the next batch is admitted only once the
-    instance drained completely."""
-
-    def __init__(self, batches: Sequence[Sequence]):
-        self._batches = [[getattr(r, "req_id", r) for r in b]
-                         for b in batches if len(b)]
-        self._next = 0
-
-    def select(self, pending, now, free, active_count):
-        if active_count > 0 or self._next >= len(self._batches):
-            return []
-        batch = self._batches[self._next]
-        pos = {r.req_id: i for i, r in enumerate(pending)}
-        if any(rid not in pos for rid in batch):
-            return []                       # members not yet arrived
-        if len(batch) > free:
-            raise RuntimeError("slot pool smaller than planned batch")
-        self._next += 1
-        return [pos[rid] for rid in batch]
-
-
-class SLOReannealPolicy(AdmissionPolicy):
-    """Re-anneal the waiting queue with Algorithm 1 at every admission
-    event, with SLO budgets shrunk by the time each request already
-    waited.  The incremental-Δ annealer keeps this cheap enough to run on
-    the admission hot path (paper Table 1)."""
-
-    def __init__(self, model: LinearLatencyModel, max_batch: int,
-                 sa_params: Optional[SAParams] = None, min_queue: int = 2):
-        self.model = model
-        self.max_batch = max_batch
-        self.sa_params = sa_params if sa_params is not None \
-            else SAParams(seed=0)
-        self.min_queue = min_queue
-
-    def select(self, pending, now, free, active_count):
-        if len(pending) < self.min_queue:
-            return list(range(min(free, len(pending))))
-        shifted = [_with_remaining_slo(r, now) for r in pending]
-        sa = priority_mapping(as_arrays(shifted), self.model,
-                              self.max_batch, self.sa_params)
-        return [int(i) for i in sa.perm]
-
-
-_POLICY_STRINGS = ("fcfs", "priority", "slo-reanneal")
-
-
-def _make_policy(policy, model, max_batch, sa_params, reanneal_min_queue
-                 ) -> AdmissionPolicy:
-    if isinstance(policy, AdmissionPolicy):
-        return policy
-    if policy in ("fcfs", "priority"):
-        return FCFSPolicy()
-    if policy == "slo-reanneal":
-        return SLOReannealPolicy(model, max_batch, sa_params,
-                                 reanneal_min_queue)
-    raise ValueError(f"unknown policy {policy!r}; expected an "
-                     f"AdmissionPolicy or one of {_POLICY_STRINGS}")
 
 
 # ------------------------------------------------------------------- core
@@ -199,8 +130,9 @@ class _Instance:
 
 def simulate(requests: Sequence[Request], model: LinearLatencyModel,
              max_batch: int,
-             policy: Union[str, AdmissionPolicy] = "fcfs", *,
+             policy: Union[str, SchedulingPolicy] = "fcfs", *,
              num_instances: int = 1,
+             discipline: Union[str, ExecutionDiscipline, None] = None,
              noise_sigma: float = 0.0,
              rng: Optional[np.random.Generator] = None,
              respect_arrivals: bool = True,
@@ -211,8 +143,13 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
 
     Parameters
     ----------
-    policy : an :class:`AdmissionPolicy` (shared across instances) or one
-        of ``"fcfs"`` / ``"priority"`` / ``"slo-reanneal"``.
+    policy : a :class:`SchedulingPolicy` (shared across instances), a v1
+        ``select``-style object (deprecated, adapted automatically), or a
+        registry key — ``"fcfs"`` / ``"priority"`` / ``"slo-reanneal"``
+        / ``"slo-preempt"``.
+    discipline : an :class:`ExecutionDiscipline` or registry key
+        (``"stall"``, ``"chunked"``, ``"chunked:32"``).  Default:
+        :class:`StallingPrefill`.
     num_instances : parallel servers draining the shared pending queue.
     respect_arrivals : when False, every request is available at t=0 and
         metrics are absolute (the classic offline-pool convention of the
@@ -221,8 +158,11 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
     inter_batch_gap : idle gap inserted before each non-first admission
         into a fully drained instance (planned-dispatch convention).
     """
-    pol = _make_policy(policy, model, max_batch, sa_params,
-                       reanneal_min_queue)
+    pol, preemptive = resolve_policy(policy, model=model,
+                                     max_batch=max_batch,
+                                     sa_params=sa_params,
+                                     min_queue=reanneal_min_queue)
+    disc = make_discipline(discipline)
     res = SimResult({}, {}, {}, {})
 
     def arr_of(r: Request) -> float:
@@ -231,6 +171,8 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
     future = sorted(requests, key=arr_of)          # stable for ties
     fi = 0
     pending: List[Request] = []
+    # preempted-request carry state: req_id -> {"gen", "ttft"}
+    carry: Dict[int, dict] = {}
     insts = [_Instance() for _ in range(num_instances)]
 
     def finish(a: dict, clock: float):
@@ -244,60 +186,124 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
         res.tpot[r.req_id] = tpot
         res.met[r.req_id] = meets_slo(r, e2e, ttft, tpot)
 
+    def decode_round(inst: _Instance):
+        """One decode iteration over the instance's active set."""
+        if not inst.active:
+            return
+        b = len(inst.active)
+        step = max(model.per_token_decode_time(b, a["accum"])
+                   for a in inst.active) * _noise(rng, noise_sigma)
+        inst.clock += step
+        still = []
+        for a in inst.active:
+            a["gen"] += 1
+            a["accum"] += 1
+            a["remaining"] -= 1
+            if a["remaining"] <= 0:
+                finish(a, inst.clock)
+            else:
+                still.append(a)
+        inst.active = still
+
+    def activate(inst: _Instance, r: Request, gen0: int,
+                 ttft0: Optional[float]):
+        """Register a freshly (re-)prefilled request as active."""
+        lo = r.output_len if r.output_len is not None \
+            else r.planning_output_len()
+        gen = gen0 + 1                       # prefill emits the next token
+        a = {"req": r, "accum": r.input_len + gen, "gen": gen,
+             "remaining": max(int(lo), 1) - gen,
+             "ttft": ttft0 if ttft0 is not None else inst.clock}
+        if a["remaining"] <= 0:              # that token was the last
+            finish(a, inst.clock)
+        else:
+            inst.active.append(a)
+
+    def run_prefill(inst: _Instance, admitted: List[Request]):
+        """Execute the admitted set's prefill under the discipline."""
+        if disc.chunk_size <= 0:
+            # batched whole-prompt prefill; running decodes stall
+            b = len(admitted)
+            lens = [r.input_len + carry.get(r.req_id, {}).get("gen", 0)
+                    for r in admitted]
+            inst.clock += max(model.prefill_time(b, ln)
+                              * _noise(rng, noise_sigma) for ln in lens)
+            for r in admitted:
+                st = carry.pop(r.req_id, None)
+                activate(inst, r, st["gen"] if st else 0,
+                         st["ttft"] if st else None)
+            return
+        # chunked: slot-by-slot, one decode round between chunks (the
+        # engine's Sarathi-style path)
+        for r in admitted:
+            st = carry.pop(r.req_id, None)
+            gen0 = st["gen"] if st else 0
+            plen = r.input_len + gen0
+            done = 0
+            while done < plen:
+                c = min(disc.chunk_size, plen - done)
+                inst.clock += model.prefill_time(1, c) \
+                    * _noise(rng, noise_sigma)
+                done += c
+                if done < plen:
+                    decode_round(inst)       # running decodes advance
+            activate(inst, r, gen0, st["ttft"] if st else None)
+
     while True:
         work_left = pending or fi < len(future)
         runnable = [i for i in insts if i.active or work_left]
         if not runnable:
             break
         inst = min(runnable, key=lambda i: i.clock)
+        idx = insts.index(inst)
         # release arrivals up to this (globally earliest) clock
         while fi < len(future) and arr_of(future[fi]) <= inst.clock:
-            pending.append(future[fi])
+            r = future[fi]
+            r.submit_time = arr_of(r)        # executor clock == sim clock
+            pending.append(r)
             fi += 1
         progressed = False
-        # admission: fill free slots; prefill stalls the running batch
         free = max_batch - len(inst.active)
-        if free > 0 and pending:
-            sel = list(pol.select(pending, inst.clock, free,
-                                  len(inst.active)))[:free]
+        # scheduling event: the policy sees pending AND active state;
+        # consulted with no free slot only if it can preempt
+        if pending and (free > 0 or (preemptive and inst.active)):
+            b = max(len(inst.active), 1)
+            view = SchedulerView(
+                pending=tuple(pending),
+                active=tuple(make_active_view(
+                    a["req"], a["gen"], a["remaining"], a["accum"],
+                    inst.clock, a["ttft"], arr_of(a["req"]), b, model)
+                    for a in inst.active),
+                now=inst.clock, free=free, max_batch=max_batch,
+                instance_id=idx,
+                pending_generated=tuple(
+                    carry.get(r.req_id, {}).get("gen", 0)
+                    for r in pending),
+                discipline=disc)
+            admit, preempt = normalize_decision(pol.decide(view), view)
+            # preemption: evict, discard KV, requeue (indices into
+            # view.pending stay valid — preempted go to the tail)
+            for j in preempt:
+                a = inst.active.pop(j)
+                rid = a["req"].req_id
+                carry[rid] = {"gen": a["gen"], "ttft": a["ttft"]}
+                res.preemptions[rid] = res.preemptions.get(rid, 0) + 1
+                pending.append(a["req"])
+                progressed = True
+            free = max_batch - len(inst.active)
+            sel = admit[:free]
             if sel:
                 admitted = [pending[j] for j in sel]
                 for j in sorted(sel, reverse=True):
                     pending.pop(j)
                 if inter_batch_gap and inst.dispatched and not inst.active:
                     inst.clock += inter_batch_gap
-                b = len(admitted)
-                inst.clock += max(
-                    model.prefill_time(b, r.input_len)
-                    * _noise(rng, noise_sigma) for r in admitted)
+                run_prefill(inst, admitted)
                 inst.dispatched = True
-                for r in admitted:
-                    lo = r.output_len if r.output_len is not None \
-                        else r.planning_output_len()
-                    a = {"req": r, "accum": r.input_len + 1, "gen": 1,
-                         "remaining": max(int(lo), 1) - 1,
-                         "ttft": inst.clock}
-                    if a["remaining"] <= 0:       # first token was the last
-                        finish(a, inst.clock)
-                    else:
-                        inst.active.append(a)
                 progressed = True
         # one decode round over the active set
         if inst.active:
-            b = len(inst.active)
-            step = max(model.per_token_decode_time(b, a["accum"])
-                       for a in inst.active) * _noise(rng, noise_sigma)
-            inst.clock += step
-            still = []
-            for a in inst.active:
-                a["gen"] += 1
-                a["accum"] += 1
-                a["remaining"] -= 1
-                if a["remaining"] <= 0:
-                    finish(a, inst.clock)
-                else:
-                    still.append(a)
-            inst.active = still
+            decode_round(inst)
             progressed = True
         if not progressed:
             if fi < len(future):                  # idle until next arrival

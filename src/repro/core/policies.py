@@ -1,0 +1,596 @@
+"""Scheduling API v2 — composable policies and execution disciplines.
+
+The v1 API (``AdmissionPolicy.select(pending, now, free, active_count)``)
+could only *pick from the pending queue*: policies saw nothing about the
+requests already running, could not evict them, and the execution mode
+(whether prefill stalls running decodes or interleaves with them) was
+hard-wired into each executor.  Multi-SLO serving needs all three knobs
+(SLOs-Serve, arXiv 2504.08784; Sarathi-style chunking), so v2 splits the
+contract into two composable abstractions shared verbatim by the
+discrete-event core (:func:`repro.core.events.simulate`) and the real
+serving engine (``repro.engine.engine.Engine.run_policy``):
+
+``SchedulingPolicy``
+    receives a :class:`SchedulerView` — the pending queue, the *active*
+    set (with generated/remaining token counts and predicted slack under
+    the latency model), the instance id, clock, and free slots — and
+    returns a :class:`Decision` with ``admit`` indices into the pending
+    queue and ``preempt`` indices into the active set.  Preempted
+    requests return to pending with their KV cache discarded; on
+    re-admission the context (prompt + tokens generated so far) is
+    re-prefilled, and both executors charge that recompute honestly.
+
+``ExecutionDiscipline``
+    governs how admitted prefills interleave with running decode rounds:
+    :class:`StallingPrefill` (whole-prompt prefill, running decodes
+    stall) vs :class:`ChunkedPrefill` (the prompt is processed in
+    ``chunk_size`` chunks with one decode round for the running batch
+    between chunks — Sarathi-style).
+
+Policies and disciplines are constructible by string key through the
+registry (:func:`make`), e.g. ``make("slo-preempt", model=m)`` or
+``make("chunked:64")``, so launchers and benchmarks can select them from
+the command line.
+
+The v1 ``AdmissionPolicy`` name survives for one release as a thin
+deprecation shim: subclasses implementing ``select`` are adapted into
+``decide`` automatically (admit-only, no preemption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.annealing import SAParams, priority_mapping
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.slo import Request, as_arrays
+
+# ----------------------------------------------------------------- views
+@dataclasses.dataclass(frozen=True)
+class ActiveView:
+    """One running request as a scheduling policy sees it."""
+    request: Request
+    generated: int          # tokens generated so far
+    remaining: int          # tokens still to generate
+    context_len: int        # l_i + generated (current KV length)
+    ttft: Optional[float]   # absolute clock of the first token (None: n/a)
+    now: float              # clock the view was built at
+    e2e_base: float         # clock origin of the request's e2e budget
+    batch: int              # batch size used for the slack projection
+    model: Optional[LinearLatencyModel]
+
+    @functools.cached_property
+    def slack(self) -> float:
+        """Predicted deadline slack (s); +inf if no applicable SLO.
+        Computed lazily — non-preemptive policies never pay for it."""
+        return compute_slack(self.request, generated=self.generated,
+                             remaining=self.remaining,
+                             context_len=self.context_len, now=self.now,
+                             ttft=self.ttft, e2e_base=self.e2e_base,
+                             batch=self.batch, model=self.model)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerView:
+    """Everything a :class:`SchedulingPolicy` may look at for one decision."""
+    pending: Tuple[Request, ...]
+    active: Tuple[ActiveView, ...]
+    now: float              # the deciding instance's clock
+    free: int               # free slots before any preemption
+    max_batch: int
+    instance_id: int = 0
+    # tokens already generated per pending entry (non-zero only for
+    # re-queued preempted requests, whose re-prefill covers them too)
+    pending_generated: Tuple[int, ...] = ()
+    # the ExecutionDiscipline the executor will run admissions under —
+    # lets policies price prefill honestly (chunked prefill interleaves
+    # decode rounds, so it lands later than a stalling prefill would)
+    discipline: Optional["ExecutionDiscipline"] = None
+
+    def pending_context_len(self, i: int) -> int:
+        """Prefill length if ``pending[i]`` were admitted now."""
+        gen = self.pending_generated[i] \
+            if i < len(self.pending_generated) else 0
+        return self.pending[i].input_len + gen
+
+
+@dataclasses.dataclass
+class Decision:
+    """``admit``: indices into ``view.pending`` in admission order (the
+    executor truncates to the slots available after preemption).
+    ``preempt``: indices into ``view.active`` to evict first (KV
+    discarded; the request returns to pending and is re-prefilled)."""
+    admit: List[int] = dataclasses.field(default_factory=list)
+    preempt: List[int] = dataclasses.field(default_factory=list)
+
+
+def compute_slack(request: Request, *, generated: int, remaining: int,
+                  context_len: int, now: float, ttft: Optional[float],
+                  e2e_base: float, batch: int,
+                  model: Optional[LinearLatencyModel]) -> float:
+    """Predicted deadline slack of a *running* request.
+
+    Slack = earliest applicable deadline − predicted finish time, where
+    the finish time is ``now`` plus the modelled decode time of the
+    remaining tokens at the current batch size.  A TTFT-only request that
+    already emitted its first token has infinite slack (it cannot miss
+    anymore); without a latency model the remaining work is treated as
+    free (slack degrades to remaining budget).
+    """
+    if model is None or remaining <= 0:
+        finish = now
+    else:
+        finish = now + model.decode_time(max(batch, 1), context_len,
+                                         remaining)
+    deadlines = []
+    if request.slo.e2e is not None:
+        deadlines.append(e2e_base + request.slo.e2e)
+    if request.slo.tpot is not None and ttft is not None:
+        total = max(generated + remaining, 1)
+        deadlines.append(ttft + request.slo.tpot * total)
+    if not deadlines:
+        return math.inf
+    return min(deadlines) - finish
+
+
+def make_active_view(request: Request, generated: int, remaining: int,
+                     context_len: int, now: float, ttft: Optional[float],
+                     e2e_base: float, batch: int,
+                     model: Optional[LinearLatencyModel]) -> ActiveView:
+    """Build one :class:`ActiveView` — shared by the event core and the
+    engine so both expose identical state to policies."""
+    return ActiveView(request=request, generated=generated,
+                      remaining=remaining, context_len=context_len,
+                      ttft=ttft, now=now, e2e_base=e2e_base, batch=batch,
+                      model=model)
+
+
+def submit_base(r: Request) -> float:
+    """The clock origin for a request's waited time / SLO budgets.
+
+    ``submit_time`` is stamped by whichever executor runs the request (on
+    *its* clock); ``arrival_time`` is the workload-relative fallback.
+    Mixing the two was the v1 clock-mismatch bug: a warm engine clock
+    minus a workload-relative arrival looked like hours of waiting.
+    """
+    return r.submit_time if r.submit_time is not None else r.arrival_time
+
+
+def with_remaining_slo(r: Request, now: float) -> Request:
+    """Shift e2e/TTFT budgets by the time already waited (one clock)."""
+    waited = max(0.0, now - submit_base(r))
+    slo = r.slo
+    new = dataclasses.replace(
+        slo,
+        e2e=(slo.e2e - waited) if slo.e2e is not None else None,
+        ttft=(slo.ttft - waited) if slo.ttft is not None else None)
+    return dataclasses.replace(r, slo=new)
+
+
+# -------------------------------------------------------------- policies
+class SchedulingPolicy:
+    """v2 contract: ``decide(view) -> Decision``.
+
+    ``preemptive`` tells executors whether to consult the policy even
+    when no slot is free (preemption is the only useful decision then).
+    ``reset()`` is called by both executors at the start of every run so
+    stateful policies (e.g. :class:`PlannedPolicy`) are reusable.
+    """
+
+    preemptive = False
+
+    def decide(self, view: SchedulerView) -> Decision:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        pass
+
+
+class FCFSPolicy(SchedulingPolicy):
+    """vLLM-like continuous batching: admit in arrival (list) order.
+
+    Also serves the planned-*priority* path: the scheduler's priority
+    order is applied upstream by flattening the planned batches."""
+
+    def decide(self, view):
+        return Decision(admit=list(range(min(view.free, len(view.pending)))))
+
+
+class PlannedPolicy(SchedulingPolicy):
+    """Execute planned batches sequentially with a barrier (the paper's
+    dispatch discipline): the next batch is admitted only once the
+    instance drained completely.  ``reset()`` rewinds the batch cursor,
+    so one policy object can drive several runs."""
+
+    def __init__(self, batches: Sequence[Sequence]):
+        self._batches = [[getattr(r, "req_id", r) for r in b]
+                         for b in batches if len(b)]
+        self._next = 0
+
+    def reset(self):
+        self._next = 0
+
+    def decide(self, view):
+        if len(view.active) > 0 or self._next >= len(self._batches):
+            return Decision()
+        batch = self._batches[self._next]
+        pos = {r.req_id: i for i, r in enumerate(view.pending)}
+        if any(rid not in pos for rid in batch):
+            return Decision()               # members not yet arrived
+        if len(batch) > view.free:
+            raise RuntimeError("slot pool smaller than planned batch")
+        self._next += 1
+        return Decision(admit=[pos[rid] for rid in batch])
+
+
+class SLOReannealPolicy(SchedulingPolicy):
+    """Re-anneal the waiting queue with Algorithm 1 at every admission
+    event, with SLO budgets shrunk by the time each request already
+    waited (on the executor's clock, via ``submit_time``).  The
+    incremental-Δ annealer keeps this cheap enough to run on the
+    admission hot path (paper Table 1)."""
+
+    def __init__(self, model: LinearLatencyModel, max_batch: int,
+                 sa_params: Optional[SAParams] = None, min_queue: int = 2):
+        self.model = model
+        self.max_batch = max_batch
+        self.sa_params = sa_params if sa_params is not None \
+            else SAParams(seed=0)
+        self.min_queue = min_queue
+
+    def decide(self, view):
+        pending = view.pending
+        if len(pending) < self.min_queue:
+            return Decision(admit=list(range(min(view.free, len(pending)))))
+        shifted = [with_remaining_slo(r, view.now) for r in pending]
+        sa = priority_mapping(as_arrays(shifted), self.model,
+                              self.max_batch, self.sa_params)
+        return Decision(admit=[int(i) for i in sa.perm])
+
+
+class SLOPreemptPolicy(SchedulingPolicy):
+    """Multi-SLO preemption (SLOs-Serve style): when a tight-SLO arrival
+    would miss its first-token deadline waiting for a natural slot, evict
+    the active request with the largest positive slack — provided that
+    victim can still absorb its own re-prefill (KV recompute) cost.
+
+    Admission order is urgency-first (smallest remaining TTFT/e2e
+    budget).  Requests without a first-token-sensitive SLO never trigger
+    an eviction.
+    """
+
+    preemptive = True
+
+    def __init__(self, model: LinearLatencyModel, margin: float = 0.0):
+        self.model = model
+        self.margin = margin
+
+    def _budget(self, view: SchedulerView, i: int) -> float:
+        """Remaining time until ``pending[i]``'s tightest live deadline."""
+        r = view.pending[i]
+        waited = max(0.0, view.now - submit_base(r))
+        cands = []
+        # a re-queued preempted request already emitted its first token:
+        # its TTFT constraint is settled, not a live deadline
+        if r.slo.ttft is not None and view.pending_context_len(i) == \
+                r.input_len:
+            cands.append(r.slo.ttft - waited)
+        if r.slo.e2e is not None:
+            cands.append(r.slo.e2e - waited)
+        return min(cands) if cands else math.inf
+
+    def _prefill_cost(self, view: SchedulerView, ctx: int) -> float:
+        """Time from admission to first token under the view's
+        discipline: whole-prompt prefill, or — chunked — the chunk sum
+        plus the decode rounds for the running batch between chunks."""
+        C = getattr(view.discipline, "chunk_size", 0)
+        if C <= 0:
+            return self.model.prefill_time(1, ctx)
+        chunks = [min(C, ctx - i) for i in range(0, ctx, C)]
+        cost = sum(self.model.prefill_time(1, c) for c in chunks)
+        if view.active and len(chunks) > 1:
+            b = len(view.active)
+            cost += (len(chunks) - 1) * max(
+                self.model.per_token_decode_time(b, v.context_len)
+                for v in view.active)
+        return cost
+
+    def _constraints(self, view: SchedulerView, i: int):
+        """(remaining budget, modelled service time) per applicable live
+        SLO of ``pending[i]`` if admitted now.  TTFT needs the prefill;
+        e2e needs prefill + the decode of its remaining output tokens."""
+        r = view.pending[i]
+        waited = max(0.0, view.now - submit_base(r))
+        ctx = view.pending_context_len(i)
+        prefill = self._prefill_cost(view, ctx)
+        out = []
+        if r.slo.ttft is not None and ctx == r.input_len:
+            out.append((r.slo.ttft - waited, prefill))
+        if r.slo.e2e is not None:
+            try:
+                gen = ctx - r.input_len
+                # prefill emits one token; the rest are decode rounds
+                rem = max(int(r.planning_output_len()) - gen - 1, 0)
+                decode = self.model.decode_time(1, ctx, rem)
+            except ValueError:              # no output-length estimate
+                decode = 0.0
+            out.append((r.slo.e2e - waited, prefill + decode))
+        return out, prefill
+
+    def decide(self, view):
+        if not view.pending:
+            return Decision()
+        budgets = [self._budget(view, i) for i in range(len(view.pending))]
+        order = sorted(range(len(view.pending)), key=budgets.__getitem__)
+        admit = order[:view.free]
+        preempt: List[int] = []
+        victims = sorted(range(len(view.active)),
+                         key=lambda j: view.active[j].slack, reverse=True)
+        vi = 0
+        # modelled completion time of each running request: the k-th
+        # arrival left waiting gets (at best) the k-th slot to free up
+        b = max(len(view.active), 1)
+        comps = {j: self.model.decode_time(b, v.context_len,
+                                           max(v.remaining, 0))
+                 for j, v in enumerate(view.active)}
+        cons_cache = {i: self._constraints(view, i)
+                      for i in range(len(view.pending))
+                      if budgets[i] != math.inf}
+        # a re-queued victim re-enters with the loosest budget, so every
+        # deadline-bearing pending request runs before it: its slack must
+        # absorb all of their service, not just the triggering arrival's
+        urgent_service = sum(max((s for _, s in cons), default=0.0)
+                             for cons, _ in cons_cache.values())
+        queued = 0                          # arrivals left to wait so far
+        for i in order[view.free:]:
+            if budgets[i] == math.inf:
+                break                       # sorted: the rest are ∞ too
+            cons, _ = cons_cache[i]
+            if any(bud < s + self.margin for bud, s in cons):
+                queued += 1                 # doomed, but it still claims
+                continue                    # a freeing slot later
+            remaining = sorted(c for j, c in comps.items()
+                               if j not in preempt)
+            # when waiters outnumber running requests the true wait is
+            # longer than any single completion; clamping to the last
+            # one is optimistic but empirically stable — an unbounded
+            # estimate here makes every overflow arrival demand an
+            # eviction and the queue thrashes (att 1.0 -> 0.89 on the
+            # contended benchmark)
+            wait = remaining[min(queued, len(remaining) - 1)] \
+                if remaining else 0.0
+            if all(bud >= wait + s + self.margin for bud, s in cons):
+                queued += 1                 # makes it without eviction
+                continue
+            if vi >= len(victims):
+                break
+            v = view.active[victims[vi]]
+            recompute = self._prefill_cost(
+                view, v.request.input_len + v.generated)
+            if not (v.slack > recompute + urgent_service + self.margin):
+                queued += 1                 # victim can't absorb THIS
+                continue                    # arrival; try the next one
+            preempt.append(victims[vi])
+            vi += 1
+            admit.append(i)
+        return Decision(admit=admit, preempt=preempt)
+
+
+# ------------------------------------------------------ v1 compatibility
+class AdmissionPolicy(SchedulingPolicy):
+    """Deprecated v1 base class (admit-only, no view of the active set).
+
+    Subclasses implementing ``select(pending, now, free, active_count)``
+    keep working — ``decide`` adapts the call — but should migrate to
+    :class:`SchedulingPolicy`.  This shim is kept for one release.
+    """
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        warnings.warn(
+            f"{cls.__name__} subclasses the deprecated AdmissionPolicy; "
+            "subclass SchedulingPolicy and implement decide(view) instead",
+            DeprecationWarning, stacklevel=2)
+
+    def select(self, pending: Sequence[Request], now: float, free: int,
+               active_count: int) -> List[int]:
+        raise NotImplementedError
+
+    def decide(self, view):
+        return Decision(admit=list(self.select(
+            list(view.pending), view.now, view.free, len(view.active))))
+
+
+class _LegacySelectAdapter(SchedulingPolicy):
+    """Wraps a duck-typed v1 object (has ``select``, no ``decide``)."""
+
+    def __init__(self, obj):
+        self._obj = obj
+
+    def reset(self):
+        reset = getattr(self._obj, "reset", None)
+        if reset is not None:
+            reset()
+
+    def decide(self, view):
+        return Decision(admit=list(self._obj.select(
+            list(view.pending), view.now, view.free, len(view.active))))
+
+
+def resolve_policy(policy, **ctx) -> Tuple[SchedulingPolicy, bool]:
+    """One policy-resolution protocol for every executor: coerce a
+    registry key (built with the ``ctx`` kwargs) or a v1/v2 policy
+    object into the v2 protocol, reset it for a fresh run, and report
+    whether it can preempt.  Returns ``(policy, preemptive)``."""
+    if isinstance(policy, str):
+        policy = make(policy, **ctx)
+    pol = as_scheduling_policy(policy)
+    if hasattr(pol, "reset"):
+        pol.reset()
+    return pol, bool(getattr(pol, "preemptive", False))
+
+
+def normalize_decision(dec: Decision, view: SchedulerView
+                       ) -> Tuple[List[int], List[int]]:
+    """Validate a policy's :class:`Decision` for an executor — one
+    protocol for the event core and the engine.
+
+    Returns ``(admit, preempt)``: both deduplicated and bounds-checked
+    against the view; ``admit`` preserves the policy's order (the caller
+    truncates to the slots available after preemption), ``preempt`` is
+    reverse-sorted so victims can be popped from the active list without
+    invalidating the remaining indices.
+    """
+    admit = [j for j in dict.fromkeys(dec.admit)
+             if 0 <= j < len(view.pending)]
+    preempt = sorted({j for j in dec.preempt if 0 <= j < len(view.active)},
+                     reverse=True)
+    return admit, preempt
+
+
+def as_scheduling_policy(obj) -> SchedulingPolicy:
+    """Coerce v1/v2 policy objects into the v2 protocol."""
+    if isinstance(obj, SchedulingPolicy):
+        return obj
+    if hasattr(obj, "decide"):
+        return obj
+    if hasattr(obj, "select"):
+        warnings.warn(
+            f"{type(obj).__name__} only implements the deprecated "
+            "select() protocol; implement decide(view) instead",
+            DeprecationWarning, stacklevel=2)
+        return _LegacySelectAdapter(obj)
+    raise TypeError(f"{obj!r} is not a SchedulingPolicy (no decide/select)")
+
+
+# ------------------------------------------------------------ disciplines
+class ExecutionDiscipline:
+    """How admitted prefills interleave with running decode rounds.
+
+    ``chunk_size == 0`` means whole-prompt prefill (running decodes
+    stall); ``chunk_size > 0`` means Sarathi-style chunking: the prompt
+    is processed ``chunk_size`` tokens at a time with one decode round
+    for the running batch between chunks.  The same objects configure
+    both the event core and the engine."""
+
+    chunk_size: int = 0
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class StallingPrefill(ExecutionDiscipline):
+    """Whole-prompt prefill; running decodes stall for its duration."""
+
+
+class ChunkedPrefill(ExecutionDiscipline):
+    """Chunked prefill: running decodes advance between chunks."""
+
+    def __init__(self, chunk_size: int = 64):
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        self.chunk_size = int(chunk_size)
+
+    def __repr__(self):
+        return f"ChunkedPrefill({self.chunk_size})"
+
+
+# --------------------------------------------------------------- registry
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Register a policy/discipline factory under a string key."""
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make(name: Union[str, SchedulingPolicy, ExecutionDiscipline], **kwargs):
+    """String-keyed factory for policies and disciplines.
+
+    ``make("fcfs")``, ``make("slo-reanneal", model=m, max_batch=8)``,
+    ``make("slo-preempt", model=m)``, ``make("planned", batches=...)``,
+    ``make("stall")``, ``make("chunked", chunk_size=32)`` or the compact
+    ``make("chunked:32")``.  Policy/discipline objects pass through
+    unchanged, so every call site can accept either form.  Factories
+    ignore context kwargs they don't need, letting callers pass one
+    blanket context (model, max_batch, …).
+    """
+    if not isinstance(name, str):
+        return name
+    key, _, suffix = name.partition(":")
+    try:
+        factory = _REGISTRY[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy/discipline {name!r}; registered keys: "
+            f"{sorted(_REGISTRY)}") from None
+    if suffix:
+        import inspect
+        if "arg" not in inspect.signature(factory).parameters:
+            raise ValueError(
+                f"{key!r} takes no ':<arg>' suffix (got {name!r})")
+        kwargs.setdefault("arg", suffix)
+    return factory(**kwargs)
+
+
+def make_discipline(obj: Union[str, ExecutionDiscipline, None]
+                    ) -> ExecutionDiscipline:
+    """Coerce strings/None into an :class:`ExecutionDiscipline`."""
+    if obj is None:
+        return StallingPrefill()
+    out = make(obj)
+    if not isinstance(out, ExecutionDiscipline):
+        raise TypeError(f"{obj!r} is not an ExecutionDiscipline")
+    return out
+
+
+def _require(kwargs_value, what, key):
+    if kwargs_value is None:
+        raise ValueError(f"policy {key!r} needs {what}")
+    return kwargs_value
+
+
+@register("fcfs")
+@register("priority")
+def _make_fcfs(**_):
+    return FCFSPolicy()
+
+
+@register("planned")
+def _make_planned(batches=None, **_):
+    return PlannedPolicy(_require(batches, "batches=...", "planned"))
+
+
+@register("slo-reanneal")
+def _make_reanneal(model=None, max_batch=None, sa_params=None,
+                   min_queue=2, **_):
+    return SLOReannealPolicy(_require(model, "model=...", "slo-reanneal"),
+                             _require(max_batch, "max_batch=...",
+                                      "slo-reanneal"),
+                             sa_params, min_queue)
+
+
+@register("slo-preempt")
+def _make_preempt(model=None, margin=0.0, **_):
+    return SLOPreemptPolicy(_require(model, "model=...", "slo-preempt"),
+                            margin=margin)
+
+
+@register("stall")
+def _make_stall(**_):
+    return StallingPrefill()
+
+
+@register("chunked")
+def _make_chunked(arg=None, chunk_size=None, **_):
+    if arg is not None:
+        size = int(arg)
+    else:
+        size = chunk_size if chunk_size is not None else 64
+    return ChunkedPrefill(size)

@@ -13,8 +13,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.annealing import SAParams, SAResult, priority_mapping
+from repro.core.events import SimResult, simulate
 from repro.core.latency_model import LinearLatencyModel
 from repro.core.objective import evaluate
+from repro.core.policies import ExecutionDiscipline, PlannedPolicy
 from repro.core.profiler import MemoryModel, OutputLengthPredictor
 from repro.core.slo import Request, as_arrays
 
@@ -141,3 +143,24 @@ class SLOAwareScheduler:
             sa_results=sa_results,
             assignment=assignment,
         )
+
+    # ------------------------------------------------ plan evaluation
+    def evaluate_plan(self, outcome: ScheduleOutcome,
+                      discipline: "str | ExecutionDiscipline | None" = None,
+                      noise_sigma: float = 0.0,
+                      seed: int = 0) -> SimResult:
+        """Execute a planned schedule through the discrete-event core
+        under a chosen :class:`ExecutionDiscipline` — so a plan can be
+        scored under stalling *and* chunked prefill before dispatching
+        it to real engines.  Returns the merged multi-instance result."""
+        out = SimResult({}, {}, {}, {})
+        for q in outcome.queues:
+            if not q.batches:
+                continue
+            ordered = [r for b in q.batches for r in b]
+            rng = np.random.default_rng(seed + 1000 * q.instance_id)
+            out = out.merged_with(simulate(
+                ordered, self.model, self.max_batch,
+                PlannedPolicy(q.batches), respect_arrivals=False,
+                noise_sigma=noise_sigma, rng=rng, discipline=discipline))
+        return out

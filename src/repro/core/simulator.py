@@ -27,6 +27,7 @@ from repro.core.events import (AdmissionPolicy, FCFSPolicy,  # noqa: F401
                                PlannedPolicy, SimResult,
                                SLOReannealPolicy, simulate)
 from repro.core.latency_model import LinearLatencyModel
+from repro.core.policies import ExecutionDiscipline
 from repro.core.slo import Request
 
 
@@ -34,14 +35,17 @@ def run_planned(batches: Sequence[Sequence[Request]],
                 model: LinearLatencyModel,
                 noise_sigma: float = 0.0,
                 rng: Optional[np.random.Generator] = None,
-                inter_batch_gap: float = 1e-4) -> SimResult:
+                inter_batch_gap: float = 1e-4,
+                discipline: "str | ExecutionDiscipline | None" = None
+                ) -> SimResult:
     """Execute planned batches sequentially on one instance."""
     batches = [list(b) for b in batches if len(b)]
     ordered = [r for b in batches for r in b]
     max_batch = max((len(b) for b in batches), default=1)
     return simulate(ordered, model, max_batch, PlannedPolicy(batches),
                     noise_sigma=noise_sigma, rng=rng,
-                    respect_arrivals=False, inter_batch_gap=inter_batch_gap)
+                    respect_arrivals=False, inter_batch_gap=inter_batch_gap,
+                    discipline=discipline)
 
 
 def run_multi_instance(queues, model: LinearLatencyModel,

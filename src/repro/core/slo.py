@@ -37,6 +37,10 @@ class Request:
     # predicted output length (filled by the output-length predictor)
     predicted_output_len: Optional[int] = None
     arrival_time: float = 0.0
+    # stamped by the executor (event core or engine) on *its* clock when
+    # the request is submitted; SLO-budget shifting uses this so waited
+    # time is never computed across two different clocks
+    submit_time: Optional[float] = None
     prompt: Optional[object] = None   # raw payload for engine-backed runs
 
     @property

@@ -3,14 +3,17 @@
 Static-shape design (TPU-friendly): a fixed pool of ``max_slots`` KV-cache
 slots of length ``max_seq_len``; prefills are padded to power-of-two length
 buckets; the decode step always runs over the full slot pool with inactive
-slots masked.  Two scheduling policies:
+slots masked.
 
-  * ``fcfs`` — vLLM-like continuous batching: admit waiting requests into
-    free slots in arrival order.
-  * ``planned`` — the SLO-aware path: execute the batches planned by
-    ``SLOAwareScheduler`` sequentially (a batch is admitted together and the
-    next batch waits until the previous one finished — the paper's
-    dispatch discipline).
+Scheduling is delegated to the v2 API (:mod:`repro.core.policies`):
+``run_policy`` accepts any :class:`SchedulingPolicy` — the same objects
+that drive the discrete-event core — builds a :class:`SchedulerView` of
+the pending and running sets each step, and honors admit *and* preempt
+decisions (evicted requests lose their KV and are re-prefilled over
+prompt + generated tokens).  ``run_fcfs`` / ``run_planned`` /
+``run_priority`` are thin wrappers over it, and an
+:class:`ExecutionDiscipline` (``StallingPrefill`` / ``ChunkedPrefill``)
+selects whole-prompt vs Sarathi-style chunked prefill per run.
 
 Every prefill/decode step is timed and fed to the ``LatencyProfiler`` so
 the paper's linear latency model can be fit from *this* engine's behaviour
@@ -19,6 +22,7 @@ the paper's linear latency model can be fit from *this* engine's behaviour
 from __future__ import annotations
 
 import time
+import warnings
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
@@ -26,7 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.events import AdmissionPolicy, FCFSPolicy, PlannedPolicy
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.policies import (ChunkedPrefill, ExecutionDiscipline,
+                                 FCFSPolicy, PlannedPolicy, SchedulerView,
+                                 SchedulingPolicy, StallingPrefill,
+                                 make_active_view, make_discipline,
+                                 normalize_decision, resolve_policy)
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import meets_slo
 from repro.engine.request import Phase, RuntimeRequest
@@ -112,18 +121,28 @@ class Engine:
         return [i for i, f in enumerate(self.slot_free) if f]
 
     # ------------------------------------------------------------ steps
+    def _context_tokens(self, rt: RuntimeRequest) -> np.ndarray:
+        """Prefill context: the prompt, plus — after a preemption — the
+        tokens already generated (vLLM-style KV recompute)."""
+        if not rt.generated:
+            return np.asarray(rt.prompt_tokens, np.int32)
+        return np.concatenate([np.asarray(rt.prompt_tokens, np.int32),
+                               np.asarray(rt.generated, np.int32)])
+
     def prefill_chunked(self, rt: RuntimeRequest, slot: int):
         """Chunked prefill: process the prompt in chunks, running a decode
         round for the other active slots between chunks."""
         C = self.chunked_prefill
-        n = rt.input_len
+        ctx = self._context_tokens(rt)
+        n = len(ctx)
+        if n >= self.max_seq_len:
+            raise ValueError(f"prefill context {n} >= max_seq_len")
         from repro.models.cache import init_cache as _ic
         cache1 = _ic(self.cfg, 1, self.max_seq_len)
         logits = None
         i = 0
         while i < n:
-            chunk = rt.prompt_tokens[i: i + C]
-            pad = C - len(chunk) if len(chunk) < C and i + C < n else 0
+            chunk = ctx[i: i + C]
             toks = np.asarray(chunk, np.int32)[None]
             # exact-size final chunk (jit recompiles per distinct size only)
             t0 = time.perf_counter()
@@ -139,7 +158,8 @@ class Engine:
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
         rt.slot = slot
-        rt.ttft_time = self.clock
+        if rt.ttft_time is None:            # preserved across preemptions
+            rt.ttft_time = self.clock
         self.key, sk = jax.random.split(self.key)
         tok = int(sample(logits[:, 0], sk, self.temperature)[0])
         self._push_token(rt, tok)
@@ -147,7 +167,8 @@ class Engine:
     def prefill(self, rt: RuntimeRequest, slot: int):
         if self.chunked_prefill:
             return self.prefill_chunked(rt, slot)
-        n = rt.input_len
+        ctx = self._context_tokens(rt)
+        n = len(ctx)
         if n >= self.max_seq_len:
             raise ValueError(f"prompt length {n} >= max_seq_len")
         # SSM/hybrid states are sequence-order sensitive: pad tokens after
@@ -155,7 +176,7 @@ class Engine:
         # prefill at exact length (one compile per distinct length).
         L = n if self.cfg.ssm_layers else _bucket(n)
         toks = np.zeros((1, L), np.int32)
-        toks[0, :n] = rt.prompt_tokens
+        toks[0, :n] = ctx
         # warm the jit cache for this bucket so compile time never
         # pollutes the engine clock / profiler samples
         if ("prefill", L) not in self._warm:
@@ -174,10 +195,24 @@ class Engine:
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
         rt.slot = slot
-        rt.ttft_time = self.clock
+        if rt.ttft_time is None:            # preserved across preemptions
+            rt.ttft_time = self.clock
         self.key, sk = jax.random.split(self.key)
         tok = int(sample(logits[None, :], sk, self.temperature)[0])
         self._push_token(rt, tok)
+
+    def preempt(self, rt: RuntimeRequest):
+        """Evict a running request: free its slot and discard its KV.
+        The generated tokens and TTFT are kept; the next prefill of this
+        request recomputes prompt + generated (cost charged as a normal
+        prefill)."""
+        if rt.slot < 0 or self.slot_req[rt.slot] is not rt:
+            raise ValueError(f"request {rt.req_id} is not running")
+        self.slot_free[rt.slot] = True
+        self.slot_req[rt.slot] = None
+        rt.slot = -1
+        rt.phase = Phase.WAITING
+        rt.preemptions += 1
 
     def _push_token(self, rt: RuntimeRequest, tok: int):
         rt.generated.append(tok)
@@ -221,52 +256,142 @@ class Engine:
 
     # ------------------------------------------------------------ runs
     def run_policy(self, rts: Sequence[RuntimeRequest],
-                   policy: AdmissionPolicy):
-        """Continuous batching with pluggable admission — the *same*
-        ``AdmissionPolicy`` objects that drive the discrete-event core
-        (``repro.core.events.simulate``), so simulated and real runs share
-        one scheduling brain."""
+                   policy: SchedulingPolicy, *,
+                   discipline: "ExecutionDiscipline | str | None" = None,
+                   model: Optional[LinearLatencyModel] = None,
+                   respect_arrivals: bool = False):
+        """Continuous batching with a pluggable :class:`SchedulingPolicy`
+        — the *same* policy and :class:`ExecutionDiscipline` objects that
+        drive the discrete-event core (``repro.core.events.simulate``),
+        so simulated and real runs share one scheduling brain.
+
+        The policy sees a :class:`SchedulerView` (pending + active sets,
+        slack under ``model`` when provided) and may *preempt* running
+        requests; evicted requests lose their KV and are re-prefilled on
+        re-admission (prompt + generated tokens).  ``discipline``
+        overrides the engine's prefill mode for this run
+        (``StallingPrefill`` / ``ChunkedPrefill(n)`` / registry key).
+        ``respect_arrivals=True`` releases each request into the waiting
+        queue only once ``Request.arrival_time`` (relative to the run
+        start) has passed on the engine clock.
+        """
+        pol, preemptive = resolve_policy(policy, model=model,
+                                         max_batch=self.max_slots)
+        if model is None:
+            # model-driven policies (slo-reanneal, slo-preempt) carry the
+            # latency model the slack projections in the views need
+            model = getattr(pol, "model", None)
+        saved_chunk = self.chunked_prefill
+        if discipline is not None:
+            disc = make_discipline(discipline)
+            if disc.chunk_size and self.cfg.mla is not None:
+                # MLA archs have no chunked path (see __init__)
+                warnings.warn(
+                    f"{disc!r} is unsupported for MLA archs; falling "
+                    "back to whole-prompt (stalling) prefill")
+                self.chunked_prefill = 0
+            else:
+                self.chunked_prefill = disc.chunk_size
+        try:
+            # the discipline this run actually executes (post MLA fallback)
+            disc = ChunkedPrefill(self.chunked_prefill) \
+                if self.chunked_prefill else StallingPrefill()
+            return self._run_policy_loop(rts, pol, preemptive, model,
+                                         respect_arrivals, disc)
+        finally:
+            self.chunked_prefill = saved_chunk
+
+    def _run_policy_loop(self, rts, pol, preemptive, model,
+                         respect_arrivals, disc):
         rts = list(rts)
-        waiting = list(rts)
-        for rt in waiting:
-            rt.submit_time = self.clock
-        while waiting or not all(self.slot_free):
+        t0 = self.clock
+        if respect_arrivals:
+            future = sorted(rts, key=lambda rt: rt.request.arrival_time)
+            waiting: List[RuntimeRequest] = []
+        else:
+            future, waiting = [], list(rts)
+            for rt in waiting:
+                rt.submit_time = self.clock
+                rt.request.submit_time = self.clock
+        fi = 0
+        while waiting or fi < len(future) or not all(self.slot_free):
+            while fi < len(future) and \
+                    future[fi].request.arrival_time <= self.clock - t0:
+                rt = future[fi]
+                # the true arrival instant (<= self.clock): queueing delay
+                # accrued while the engine was mid-step must count toward
+                # e2e/TTFT and SLO-budget shifting, as in the event core
+                rt.submit_time = t0 + rt.request.arrival_time
+                rt.request.submit_time = rt.submit_time
+                waiting.append(rt)
+                fi += 1
             free = self.free_slots()
             admitted = False
-            if waiting and free:
-                active_count = self.max_slots - len(free)
-                sel = list(policy.select([rt.request for rt in waiting],
-                                         self.clock, len(free),
-                                         active_count))[:len(free)]
+            if waiting and (free or (preemptive
+                                     and not all(self.slot_free))):
+                active_rts = [rt for rt in self.slot_req if rt is not None]
+                b = max(len(active_rts), 1)
+                view = SchedulerView(
+                    pending=tuple(rt.request for rt in waiting),
+                    active=tuple(make_active_view(
+                        rt.request, len(rt.generated),
+                        rt.max_new_tokens - len(rt.generated),
+                        rt.input_len + len(rt.generated), self.clock,
+                        rt.ttft_time, rt.submit_time, b, model)
+                        for rt in active_rts),
+                    now=self.clock, free=len(free),
+                    max_batch=self.max_slots,
+                    pending_generated=tuple(len(rt.generated)
+                                            for rt in waiting),
+                    discipline=disc)
+                admit, preempt = normalize_decision(pol.decide(view), view)
+                for j in preempt:
+                    vict = active_rts[j]
+                    # re-prefill must fit: prompt + generated + next token
+                    if vict.input_len + len(vict.generated) + 1 \
+                            >= self.max_seq_len:
+                        continue
+                    self.preempt(vict)
+                    waiting.append(vict)        # view indices stay valid
+                    admitted = True
+                free = self.free_slots()
+                sel = admit[:len(free)]
                 chosen = [waiting[j] for j in sel]
                 for j in sorted(sel, reverse=True):
                     waiting.pop(j)
                 for rt, slot in zip(chosen, free):
                     self.prefill(rt, slot)
-                admitted = bool(chosen)
+                admitted = admitted or bool(chosen)
             idle = all(self.slot_free)
             self.decode_round()
-            if waiting and idle and not admitted:
-                raise RuntimeError("admission stalled: policy admitted "
-                                   "nothing while the engine was idle")
+            if idle and not admitted:
+                if fi < len(future):
+                    # idle-wait for the next arrival on the engine clock
+                    self.clock = max(self.clock,
+                                     t0 + future[fi].request.arrival_time)
+                elif waiting:
+                    raise RuntimeError("admission stalled: policy admitted "
+                                       "nothing while the engine was idle")
         return self._collect(rts)
 
-    def run_fcfs(self, rts: Sequence[RuntimeRequest]):
+    def run_fcfs(self, rts: Sequence[RuntimeRequest], **kw):
         """Continuous batching, FCFS admission."""
-        return self.run_policy(rts, FCFSPolicy())
+        return self.run_policy(rts, FCFSPolicy(), **kw)
 
-    def run_priority(self, batches: Sequence[Sequence[RuntimeRequest]]):
+    def run_priority(self, batches: Sequence[Sequence[RuntimeRequest]],
+                     **kw):
         """Continuous batching with the planned priority order as arrival
         order — the paper's actual dispatch (§5.1: batches submitted 0.1 ms
         apart into a continuously-batching engine)."""
         return self.run_policy([rt for b in batches for rt in b],
-                               FCFSPolicy())
+                               FCFSPolicy(), **kw)
 
-    def run_planned(self, batches: Sequence[Sequence[RuntimeRequest]]):
+    def run_planned(self, batches: Sequence[Sequence[RuntimeRequest]],
+                    **kw):
         """Execute scheduler-planned batches sequentially (barrier between
         batches, enforced by ``PlannedPolicy``)."""
         allr = [rt for b in batches for rt in b]
-        return self.run_policy(allr, PlannedPolicy(batches))
+        return self.run_policy(allr, PlannedPolicy(batches), **kw)
 
     def _collect(self, rts):
         out = {}
@@ -276,6 +401,7 @@ class Engine:
                 "e2e": e2e, "ttft": ttft, "tpot": tpot,
                 "tokens": list(rt.generated),
                 "met": meets_slo(rt.request, e2e, ttft, tpot),
+                "preemptions": rt.preemptions,
             }
         return out
 

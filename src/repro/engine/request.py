@@ -28,6 +28,7 @@ class RuntimeRequest:
     submit_time: float = 0.0
     ttft_time: Optional[float] = None
     finish_time: Optional[float] = None
+    preemptions: int = 0                 # times evicted (KV recomputed)
 
     @property
     def req_id(self) -> int:

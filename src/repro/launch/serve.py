@@ -2,7 +2,13 @@
 synthetic mixed workload.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --n 12 --policy slo|fcfs
+      --n 12 --policy slo|fcfs|slo-preempt [--discipline stall|chunked:32]
+
+Policies and disciplines are resolved through the v2 registry
+(``repro.core.policies.make``): ``slo`` plans batches offline with
+Algorithm 1/2 and dispatches them; ``fcfs`` and ``slo-preempt`` drive the
+engine's admission loop directly (the latter may evict running requests
+when a tight-SLO arrival would otherwise miss — KV is recomputed).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.core import SAParams, SLOAwareScheduler
+from repro.core.policies import make, make_discipline
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import SLO, Request
 from repro.data.synthetic import CHAT_SLO, CODE_SLO
@@ -22,17 +29,21 @@ from repro.engine.request import RuntimeRequest
 from repro.models import init_params
 
 
-def synth_workload(n, vocab, rng, scale=1.0):
+def synth_workload(n, vocab, rng, scale=1.0, arrival_rate=0.0):
     rts = []
+    t = 0.0
     for i in range(n):
         code = i % 2 == 0
         slo = SLO(e2e=8.0 * scale) if code else SLO(ttft=3.0 * scale,
                                                     tpot=0.5 * scale)
         lin = int(rng.integers(16, 96))
         lout = int(rng.integers(8, 48))
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
         rts.append(RuntimeRequest(
             request=Request(req_id=i, task_type="code" if code else "chat",
-                            input_len=lin, slo=slo, output_len=lout),
+                            input_len=lin, slo=slo, output_len=lout,
+                            arrival_time=t),
             prompt_tokens=rng.integers(0, vocab, lin).astype(np.int32),
             max_new_tokens=lout))
     return rts
@@ -43,7 +54,12 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--n", type=int, default=12)
-    ap.add_argument("--policy", choices=("slo", "fcfs"), default="slo")
+    ap.add_argument("--policy", choices=("slo", "fcfs", "slo-preempt"),
+                    default="slo")
+    ap.add_argument("--discipline", default="stall",
+                    help="stall | chunked | chunked:<size>")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="requests/s; 0 = all submitted at t=0")
     ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
 
@@ -55,7 +71,9 @@ def main():
                          "dry-run for qwen2-vl shapes")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    rts = synth_workload(args.n, cfg.vocab_size, rng)
+    rts = synth_workload(args.n, cfg.vocab_size, rng,
+                         arrival_rate=args.arrival_rate)
+    discipline = make_discipline(args.discipline)
 
     prof = LatencyProfiler()
     warm = Engine(cfg, params, max_slots=args.max_batch, max_seq_len=256,
@@ -64,9 +82,8 @@ def main():
     model = prof.fit()
 
     eng = Engine(cfg, params, max_slots=args.max_batch, max_seq_len=256)
-    if args.policy == "fcfs":
-        out = eng.run_fcfs(rts)
-    else:
+    respect = args.arrival_rate > 0
+    if args.policy == "slo":
         reqs = [rt.request for rt in rts]
         for rt, r in zip(rts, reqs):
             r.predicted_output_len = rt.max_new_tokens
@@ -74,15 +91,26 @@ def main():
                                   max_batch=args.max_batch,
                                   sa_params=SAParams(seed=0))
         outcome = sched.schedule(reqs)
+        # score the plan under both disciplines before dispatch
+        for disc in ("stall", f"chunked:{discipline.chunk_size or 32}"):
+            ev = sched.evaluate_plan(outcome, discipline=disc)
+            print(f"plan under {disc:<12}: predicted G={ev.G:.4f} "
+                  f"attainment={ev.attainment:.2f}")
         by_id = {rt.req_id: rt for rt in rts}
         planned = [[by_id[r.req_id] for r in b]
                    for b in outcome.queues[0].batches]
-        out = eng.run_planned(planned)
+        out = eng.run_planned(planned, discipline=discipline, model=model,
+                              respect_arrivals=respect)
+    else:
+        pol = make(args.policy, model=model, max_batch=args.max_batch)
+        out = eng.run_policy(rts, pol, discipline=discipline, model=model,
+                             respect_arrivals=respect)
     met = sum(v["met"] for v in out.values())
     tot = sum(v["e2e"] for v in out.values())
-    print(f"policy={args.policy} arch={cfg.name} "
+    npre = sum(v["preemptions"] for v in out.values())
+    print(f"policy={args.policy} discipline={discipline!r} arch={cfg.name} "
           f"G={met / tot if tot else 0:.4f} attainment={met}/{len(out)} "
-          f"avg={tot / len(out):.2f}s")
+          f"avg={tot / len(out):.2f}s preemptions={npre}")
 
 
 if __name__ == "__main__":

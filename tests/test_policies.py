@@ -1,0 +1,441 @@
+"""Scheduling API v2: SchedulingPolicy/ExecutionDiscipline contract,
+SLO-aware preemption (core + engine), chunked-prefill semantics in the
+event core with engine parity, the policy/discipline registry, the
+AdmissionPolicy deprecation shim, PlannedPolicy reuse, and the
+submit-time clock-mismatch regression."""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_TABLE2, AdmissionPolicy, ChunkedPrefill,
+                        Decision, FCFSPolicy, PlannedPolicy, SAParams,
+                        SchedulingPolicy, SLOPreemptPolicy,
+                        SLOReannealPolicy, StallingPrefill,
+                        as_scheduling_policy, make, make_discipline,
+                        simulate)
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.policies import (SchedulerView, make_active_view,
+                                 submit_base, with_remaining_slo)
+from repro.core.slo import SLO, Request
+
+# prefill = 0.5 s, per-token decode = 0.25 s (b- and length-independent)
+CONST = LinearLatencyModel(0, 0, 0, 0.5, 0, 0, 0, 0.25)
+# prefill = 0.01 s/token (chunk-size sensitive), decode = 0.25 s/token
+PROP = LinearLatencyModel(0, 0, 0.01, 0, 0, 0, 0, 0.25)
+
+
+def _req(i, li, lo, slo=None, arrival=0.0):
+    return Request(i, "chat", li, slo or SLO(ttft=1e6, tpot=1e6),
+                   output_len=lo, arrival_time=arrival)
+
+
+# ----------------------------------------------------------- preemption
+def test_preempt_core_tight_arrival_meets_slo():
+    """Acceptance: a tight-SLO late arrival meets its SLO under
+    SLOPreemptPolicy and misses it under plain FCFS; the evicted
+    request's KV-recompute cost is charged (its e2e grows)."""
+    slow = _req(0, 10, 100, SLO(e2e=1e6))          # huge slack
+    tight = _req(1, 8, 3, SLO(ttft=1.0), arrival=1.0)
+    fcfs = simulate([slow, tight], CONST, 1, "fcfs")
+    pre = simulate([slow, tight], CONST, 1,
+                   make("slo-preempt", model=CONST))
+    assert not fcfs.met[1]                          # waits behind slow
+    assert pre.met[1]
+    assert pre.ttft[1] == pytest.approx(0.5)        # prefill right away
+    # the preemption is observable, and both requests still complete
+    assert pre.preemptions == {0: 1} and fcfs.n_preempted == 0
+    assert pre.n == fcfs.n == 2
+    assert pre.met[0]                               # victim still fine
+    # honesty: victim pays the re-prefill (prompt + generated recompute)
+    assert pre.e2e[0] > fcfs.e2e[0]
+
+
+def test_preempt_never_evicts_negative_slack():
+    """A victim whose slack cannot absorb the recompute is left alone."""
+    slow = _req(0, 10, 100, SLO(e2e=25.5))          # barely feasible
+    tight = _req(1, 8, 3, SLO(ttft=1.0), arrival=1.0)
+    pre = simulate([slow, tight], CONST, 1,
+                   make("slo-preempt", model=CONST))
+    assert pre.n_preempted == 0
+    assert pre.met[0]                               # slow still meets
+
+
+def test_preempted_request_token_accounting():
+    """The victim keeps its generated tokens and TTFT; re-admission
+    re-prefills l_i + generated and emits the next token."""
+    slow = _req(0, 10, 100, SLO(e2e=1e6))
+    tight = _req(1, 8, 3, SLO(ttft=1.0), arrival=1.0)
+    pre = simulate([slow, tight], CONST, 1,
+                   make("slo-preempt", model=CONST))
+    fcfs = simulate([slow, tight], CONST, 1, "fcfs")
+    # TTFT survives the preemption: first token at the original prefill
+    assert pre.ttft[0] == pytest.approx(fcfs.ttft[0]) == pytest.approx(0.5)
+    # e2e grows by exactly: idle tail of tight's service + re-prefill −
+    # the decode round that would have run instead (CONST timings)
+    assert pre.e2e[0] > fcfs.e2e[0]
+    assert pre.tpot[0] == pytest.approx((pre.e2e[0] - pre.ttft[0]) / 100)
+
+
+def test_preempt_e2e_tight_arrival_counts_decode_time():
+    """e2e-SLO arrivals need prefill + remaining-decode inside the
+    budget: 2.0 s covers 0.5 + 4x0.25 only if admitted immediately, so
+    the policy must evict rather than wait."""
+    slow = _req(0, 10, 100, SLO(e2e=1e6))
+    tight = _req(1, 8, 5, SLO(e2e=2.0), arrival=1.0)
+    pre = simulate([slow, tight], CONST, 1,
+                   make("slo-preempt", model=CONST))
+    assert pre.n_preempted == 1 and pre.met[1]
+
+
+def test_preempt_skips_doomed_e2e_arrival():
+    """An e2e budget that cannot even cover prefill + decode must not
+    cost a healthy victim its KV (no-thrash guard, e2e flavor)."""
+    slow = _req(0, 10, 100, SLO(e2e=1e6))
+    doomed = _req(1, 8, 5, SLO(e2e=1.0), arrival=1.0)   # needs 1.5 s
+    pre = simulate([slow, doomed], CONST, 1,
+                   make("slo-preempt", model=CONST))
+    assert pre.n_preempted == 0
+
+
+def test_preempt_prices_chunked_prefill_honestly():
+    """Under ChunkedPrefill the time-to-first-token includes the decode
+    rounds interleaved between chunks; an arrival savable under stalling
+    prefill may be doomed under chunking and must not cost a victim."""
+    def workload():
+        runners = [_req(i, 10, 200, SLO(e2e=1e6)) for i in range(2)]
+        return runners + [_req(2, 32, 2, SLO(ttft=0.75), arrival=1.0)]
+    pol = make("slo-preempt", model=PROP)
+    # chunked: 4 chunks x 0.08 + 3 decode rounds x 0.25 = 1.07 s > 0.75
+    c = simulate(workload(), PROP, 2, pol, discipline="chunked:8")
+    assert c.n_preempted == 0
+    # stalling: 0.32 s prefill fits the budget -> eviction pays off
+    s = simulate(workload(), PROP, 2, pol, discipline="stall")
+    assert s.n_preempted == 1 and s.met[2]
+
+
+def test_victim_guard_accounts_for_other_urgent_pending():
+    """A victim must absorb the service of EVERY deadline-bearing
+    pending request (they all re-queue ahead of it), not just the
+    triggering arrival's — else eviction turns a met SLO into a miss."""
+    victim = _req(0, 10, 400, SLO(e2e=115.0))     # met if left alone
+    big = _req(1, 2800, 2, SLO(ttft=29.0), arrival=1.0)   # 28 s prefill
+    small = _req(2, 8, 2, SLO(ttft=40.0), arrival=1.0)
+    sim = simulate([victim, big, small], PROP, 1,
+                   make("slo-preempt", model=PROP))
+    assert sim.n_preempted == 0
+    assert sim.met[0]              # victim never sacrificed into a miss
+
+
+def test_make_rejects_suffix_for_suffixless_keys():
+    with pytest.raises(ValueError):
+        make("stall:32")
+    with pytest.raises(ValueError):
+        make("fcfs:1")
+
+
+def test_preempt_accounts_consumed_wait_capacity():
+    """Regression: with two tight arrivals and only one soon-to-finish
+    slot, the second arrival must not be judged against the first slot's
+    wait (already claimed) — it needs its own eviction."""
+    a0 = _req(0, 10, 10, SLO(e2e=5.0))        # finishes soon, low slack
+    a1 = _req(1, 10, 200, SLO(e2e=1e6))       # long, huge slack
+    b0 = _req(2, 8, 2, SLO(ttft=3.5), arrival=1.0)
+    b1 = _req(3, 8, 2, SLO(ttft=3.6), arrival=1.0)
+    pre = simulate([a0, a1, b0, b1], CONST, 2,
+                   make("slo-preempt", model=CONST))
+    # b0 waits for a0's slot; b1 gets one via evicting a1 — everyone met
+    assert pre.preemptions == {1: 1}
+    assert pre.attainment == 1.0
+
+
+def test_requeued_request_ttft_constraint_is_settled():
+    """Regression: a re-queued preempted request already emitted its
+    first token, so its (long-expired) TTFT budget must not mark it
+    doomed — its live e2e deadline can still earn eviction assistance."""
+    pol = make("slo-preempt", model=CONST)
+    victim = _req(0, 10, 100, SLO(e2e=1e6))
+    active = (make_active_view(victim, 10, 90, 20, 50.0, 0.5, 0.0, 1,
+                               CONST),)
+    rq = Request(1, "chat", 8, SLO(ttft=1.0, e2e=60.0), output_len=10)
+    rq.submit_time = 0.0                    # waited 50 s: TTFT long dead
+    view = SchedulerView(pending=(rq,), active=active, now=50.0, free=0,
+                         max_batch=1, pending_generated=(5,))
+    dec = pol.decide(view)
+    assert dec.preempt == [0] and dec.admit == [0]
+    # ...but a FRESH request whose TTFT budget is already blown (and
+    # whose e2e cannot be saved either) stays classified as doomed
+    fresh = Request(2, "chat", 8, SLO(ttft=1.0, e2e=49.5), output_len=10)
+    fresh.submit_time = 0.0
+    view2 = SchedulerView(pending=(fresh,), active=active, now=50.0,
+                          free=0, max_batch=1, pending_generated=(0,))
+    assert pol.decide(view2).preempt == []
+
+
+def test_decision_indices_are_sanitized():
+    """Duplicate / out-of-range admit and preempt indices from a custom
+    policy must not drop or double-admit requests (normalize_decision)."""
+    class Sloppy(SchedulingPolicy):
+        def decide(self, view):
+            return Decision(admit=[0, 0, 1, -3, 99],
+                            preempt=[-1, 99])
+    reqs = [_req(i, 10, 3) for i in range(2)]
+    sim = simulate(reqs, CONST, 4, Sloppy(), respect_arrivals=False)
+    assert sim.n == 2
+    assert sim.n_preempted == 0          # bogus preempt indices ignored
+    assert sim.ttft[0] == sim.ttft[1] == pytest.approx(0.5)
+
+
+# ----------------------------------------------------- chunked discipline
+def test_chunked_core_decodes_advance_between_chunks():
+    """Acceptance: the event core reproduces ChunkedPrefill semantics —
+    running decodes advance between prefill chunks.  Exact timeline under
+    PROP (prefill 0.01 s/token, decode 0.25 s/token), chunk=8:
+    req1 (l_i=32) prefills in 4 chunks with req0 decoding in between."""
+    reqs = [_req(0, 8, 5), _req(1, 32, 2, arrival=0.1)]
+    c = simulate(reqs, PROP, 2, "fcfs", discipline="chunked:8")
+    assert c.ttft[0] == pytest.approx(0.08)
+    # req0: 3 decodes interleaved with req1's chunks, finishes during them
+    assert c.e2e[0] == pytest.approx(1.32)
+    # req1 TTFT: 4 chunks x 0.08 + 3 interleaved decode rounds, - arrival
+    assert c.ttft[1] == pytest.approx(0.08 * 4 + 3 * 0.25 + 0.33 - 0.1)
+    assert c.e2e[1] == pytest.approx(c.ttft[1] + 0.25)
+    # vs stalling: req0's decodes stall for req1's whole 0.32 s prefill
+    s = simulate([_req(0, 8, 5), _req(1, 32, 2, arrival=0.1)], PROP, 2,
+                 "fcfs", discipline="stall")
+    assert c.e2e[0] < s.e2e[0]
+    assert s.ttft[1] < c.ttft[1]        # stall favors the newcomer
+
+
+def test_chunked_single_request_equals_stall_when_one_chunk():
+    """chunk >= l_i degenerates to whole-prompt prefill timings."""
+    a = simulate([_req(0, 10, 5)], CONST, 4, "fcfs", discipline="stall")
+    b = simulate([_req(0, 10, 5)], CONST, 4, "fcfs",
+                 discipline=ChunkedPrefill(16))
+    assert a.e2e[0] == pytest.approx(b.e2e[0])
+    assert a.ttft[0] == pytest.approx(b.ttft[0])
+
+
+# ------------------------------------------------------- planned + reuse
+def test_planned_policy_is_reusable_across_runs():
+    reqs = [_req(i, 10, 3) for i in range(4)]
+    pol = PlannedPolicy([reqs[:2], reqs[2:]])
+    a = simulate(reqs, CONST, 4, pol, respect_arrivals=False)
+    b = simulate(reqs, CONST, 4, pol, respect_arrivals=False)
+    assert a.n == b.n == 4
+    assert a.e2e == b.e2e and a.ttft == b.ttft
+
+
+# --------------------------------------------------------------- registry
+def test_registry_make():
+    assert isinstance(make("fcfs"), FCFSPolicy)
+    assert isinstance(make("priority"), FCFSPolicy)
+    assert isinstance(make("slo-reanneal", model=CONST, max_batch=4),
+                      SLOReannealPolicy)
+    pre = make("slo-preempt", model=CONST)
+    assert isinstance(pre, SLOPreemptPolicy) and pre.preemptive
+    assert isinstance(make("planned", batches=[[0]]), PlannedPolicy)
+    assert make("chunked:32").chunk_size == 32
+    assert make("chunked", chunk_size=16).chunk_size == 16
+    assert make("chunked").chunk_size == 64
+    assert make("stall").chunk_size == 0
+    assert isinstance(make_discipline(None), StallingPrefill)
+    d = ChunkedPrefill(8)
+    assert make(d) is d and make_discipline(d) is d
+    with pytest.raises(ValueError):
+        make("no-such-policy")
+    with pytest.raises(ValueError):
+        make("slo-reanneal")                # missing model/max_batch
+    with pytest.raises(ValueError):
+        ChunkedPrefill(0)
+    with pytest.raises(TypeError):
+        make_discipline("fcfs")             # a policy, not a discipline
+
+
+def test_admission_policy_shim_still_runs():
+    """v1 subclasses (select-only) are adapted into decide() and warn."""
+    with pytest.warns(DeprecationWarning):
+        class TailFirst(AdmissionPolicy):
+            def select(self, pending, now, free, active_count):
+                return list(range(len(pending)))[::-1]
+    reqs = [_req(i, 10, 3) for i in range(4)]
+    sim = simulate(reqs, CONST, 2, TailFirst(), respect_arrivals=False)
+    assert sim.n == 4
+    # tail-first admission: req 3 gets the first prefill slot
+    assert sim.ttft[3] == pytest.approx(0.5)
+
+    class DuckSelect:                       # duck-typed, not a subclass
+        def select(self, pending, now, free, active_count):
+            return list(range(min(free, len(pending))))
+    with pytest.warns(DeprecationWarning):
+        pol = as_scheduling_policy(DuckSelect())
+    sim2 = simulate(reqs, CONST, 2, pol, respect_arrivals=False)
+    assert sim2.n == 4
+
+
+def test_v2_policy_objects_shared_by_core_signature():
+    """Native v2 policies raise no deprecation warnings and pass through
+    as_scheduling_policy unchanged."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        class Mine(SchedulingPolicy):
+            def decide(self, view):
+                return Decision(admit=list(range(min(view.free,
+                                                     len(view.pending)))))
+        pol = Mine()
+        assert as_scheduling_policy(pol) is pol
+        sim = simulate([_req(0, 10, 3)], CONST, 2, pol,
+                       respect_arrivals=False)
+    assert sim.n == 1
+
+
+# ------------------------------------------------- clock-mismatch (unit)
+def test_with_remaining_slo_honors_submit_time():
+    """Regression: waited time must be computed on one clock.  A warm
+    executor clock (now=100) with a workload-relative arrival (0) used to
+    collapse every budget; submit_time fixes the origin."""
+    r = Request(0, "chat", 10, SLO(ttft=5.0, tpot=0.1), arrival_time=0.0)
+    bad = with_remaining_slo(r, 100.0)       # fallback: arrival clock
+    assert bad.slo.ttft == pytest.approx(-95.0)
+    r.submit_time = 100.0
+    assert submit_base(r) == 100.0
+    good = with_remaining_slo(r, 100.0)      # same clock -> zero waited
+    assert good.slo.ttft == pytest.approx(5.0)
+    assert good.slo.tpot == pytest.approx(0.1)   # tpot never shifted
+    later = with_remaining_slo(r, 102.5)
+    assert later.slo.ttft == pytest.approx(2.5)
+
+
+def test_core_stamps_submit_time_on_its_clock():
+    """The event core stamps submit_time at release so policies always
+    see a single clock, even for requests previously run elsewhere."""
+    r = _req(0, 10, 3, arrival=2.0)
+    r.submit_time = 12345.0                  # stale stamp from another run
+    sim = simulate([r], CONST, 2, "fcfs")
+    assert r.submit_time == pytest.approx(2.0)
+    assert sim.ttft[0] == pytest.approx(0.5)  # arrival-relative
+
+
+# ===================================================== engine (JAX) side
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.models import ModelConfig, init_params
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      dtype="float32")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _rts(specs, vocab=128, seed=0):
+    """specs: list of (li, max_new, slo, arrival)."""
+    from repro.engine.request import RuntimeRequest
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (li, lo, slo, arr) in enumerate(specs):
+        r = Request(i, "chat", li, slo, output_len=lo, arrival_time=arr)
+        r.predicted_output_len = lo
+        out.append(RuntimeRequest(
+            request=r,
+            prompt_tokens=rng.integers(0, vocab, li).astype(np.int32),
+            max_new_tokens=lo))
+    return out
+
+
+def test_engine_preemption_observable(tiny):
+    """Acceptance: the same SLOPreemptPolicy object produces observable
+    preemption in the engine — a tight late arrival is served ahead of a
+    large-slack running request, whose KV is recomputed honestly."""
+    from repro.engine.engine import Engine
+    specs = [(12, 40, SLO(e2e=1e6), 0.0),           # long, huge slack
+             (8, 3, SLO(ttft=0.2), 0.001)]          # tight late arrival
+    rts_f = _rts(specs)
+    fcfs = Engine(tiny[0], tiny[1], max_slots=1, max_seq_len=128) \
+        .run_policy(rts_f, "fcfs", respect_arrivals=True)
+    # queueing delay counts from the true arrival instant, not release
+    assert rts_f[1].submit_time == pytest.approx(0.001)
+    pol = SLOPreemptPolicy(PAPER_TABLE2)
+    pre = Engine(tiny[0], tiny[1], max_slots=1, max_seq_len=128) \
+        .run_policy(_rts(specs), pol, model=PAPER_TABLE2,
+                    respect_arrivals=True)
+    # preemption happened, and only where expected
+    assert pre[0]["preemptions"] >= 1 and pre[1]["preemptions"] == 0
+    assert all(v["preemptions"] == 0 for v in fcfs.values())
+    # every request still completes fully after the KV recompute
+    assert len(pre[0]["tokens"]) == 40 and len(pre[1]["tokens"]) == 3
+    assert len(fcfs[0]["tokens"]) == 40
+    # the tight arrival jumped the queue: it finishes before the long
+    # request, and earlier than under FCFS (which drains 0 first).
+    # NOTE: wall-clock ratios and met-flags are timing-flaky on a loaded
+    # CPU; the deterministic met-under-preempt / miss-under-FCFS
+    # acceptance lives in test_preempt_core_tight_arrival_meets_slo.
+    assert pre[1]["e2e"] < pre[0]["e2e"]
+    assert fcfs[1]["ttft"] > pre[1]["ttft"]
+    assert fcfs[1]["e2e"] > fcfs[0]["e2e"]     # FCFS: 1 waited behind 0
+
+
+def test_engine_core_chunked_parity(tiny):
+    """Acceptance: same workload + same ChunkedPrefill discipline through
+    the engine and the event core — TTFT/e2e orderings and met flags
+    agree (the chunked analog of the PR-1 drift fix)."""
+    from repro.core import fit
+    from repro.core.profiler import LatencyProfiler
+    from repro.engine.engine import Engine
+    met_slo = SLO(ttft=1e6, tpot=1e6)
+    miss_slo = SLO(e2e=1e-9)
+    specs = [(24, 2, met_slo, 0.0), (9, 12, miss_slo, 0.0),
+             (30, 4, met_slo, 0.0), (17, 8, miss_slo, 0.0)]
+    # fit the latency model from this engine's own behaviour
+    prof = LatencyProfiler()
+    warm = Engine(tiny[0], tiny[1], max_slots=2, max_seq_len=128,
+                  profiler=prof)
+    warm.run_fcfs(_rts(specs))
+    model = prof.fit()
+    disc = ChunkedPrefill(8)
+    eng = Engine(tiny[0], tiny[1], max_slots=2, max_seq_len=128)
+    out = eng.run_fcfs(_rts(specs), discipline=disc)
+    sim = simulate([rt.request for rt in _rts(specs)], model, 2, "fcfs",
+                   discipline=disc, respect_arrivals=False)
+
+    def order(d):
+        return sorted(d, key=lambda k: d[k])
+    assert order({k: v["ttft"] for k, v in out.items()}) == order(sim.ttft)
+    assert order({k: v["e2e"] for k, v in out.items()}) == order(sim.e2e)
+    assert {k: v["met"] for k, v in out.items()} == sim.met
+
+
+def test_engine_warm_clock_keeps_slo_budgets(tiny):
+    """Regression (clock mismatch): on a warm engine, SLO budgets must be
+    shifted by time waited on the ENGINE clock (via submit_time), not by
+    engine-clock-minus-workload-arrival."""
+    from repro.engine.engine import Engine
+
+    class Probe(SLOReannealPolicy):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.views = []
+
+        def decide(self, view):
+            self.views.append(view)
+            return super().decide(view)
+
+    eng = Engine(tiny[0], tiny[1], max_slots=2, max_seq_len=128)
+    eng.run_fcfs(_rts([(10, 4, SLO(ttft=1e6, tpot=1e6), 0.0)] * 2))
+    warm_clock = eng.clock
+    assert warm_clock > 0                   # the heart of the regression
+    probe = Probe(PAPER_TABLE2, 2, SAParams(seed=0))
+    out = eng.run_policy(_rts([(10, 3, SLO(ttft=5.0, tpot=10.0), 0.0)] * 4,
+                              seed=1), probe)
+    assert len(out) == 4
+    v = probe.views[0]
+    assert v.now >= warm_clock
+    for r in v.pending:
+        assert r.submit_time is not None and r.submit_time >= warm_clock
+        # with the bug, waited == engine clock and this went negative
+        shifted = with_remaining_slo(r, v.now)
+        assert shifted.slo.ttft == pytest.approx(
+            5.0 - (v.now - r.submit_time), abs=1e-9)
+        assert shifted.slo.ttft > 4.0
