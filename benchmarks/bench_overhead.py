@@ -1,8 +1,11 @@
 """Paper Table 1 — scheduling overhead: simulated annealing vs exhaustive
 search, request numbers 4/6/8/10, max batch size 1 — plus the
-incremental-Δ annealer at production queue depths (N ≥ 64), where the
+incremental-Δ annealers at production queue depths (N ≥ 64), where the
 O(batch + n_batches) per-proposal scoring is compared against the
-full-``evaluate``-per-proposal oracle path (``incremental=False``)."""
+full-``evaluate``-per-proposal oracle path (``incremental=False``) on
+BOTH backends (Python and jitted JAX), and the vmapped multi-instance
+anneal is compared against a per-instance loop of single-instance
+calls."""
 from __future__ import annotations
 
 import dataclasses
@@ -10,7 +13,8 @@ import dataclasses
 from benchmarks.common import emit, timeit
 from repro.core import (PAPER_TABLE2, SAParams, as_arrays, exhaustive_search,
                         priority_mapping)
-from repro.core.annealing_jax import JaxSAConfig, priority_mapping_jax
+from repro.core.annealing_jax import (JaxSAConfig, priority_mapping_jax,
+                                      priority_mapping_multi_jax)
 from repro.data.synthetic import sample_requests
 
 
@@ -64,6 +68,54 @@ def main(quick: bool = False):
                              f"seconds={t_inc:.5f};"
                              f"full_eval={t_full:.5f};"
                              f"speedup={t_full / t_inc:.2f}x"])
+    # --- jitted annealer: incremental-Δ vs full-evaluate per proposal
+    # (warm times; the proposal count is fixed by the temperature
+    # schedule, so the call-time ratio IS the per-proposal ratio).
+    # num_chains stays at the production default even in --quick: the
+    # vmap width amortizes the fixed per-proposal dispatch overhead, and
+    # the incremental/full ratio is only meaningful in that regime.
+    jcfg = JaxSAConfig(num_chains=8)
+    # proposals per chain are fixed by the temperature schedule (the
+    # contended workloads never trigger the all-met early exit)
+    props = jcfg.n_levels * jcfg.iters
+    for n in ((64, 128) if quick else (64, 128, 256)):
+        reqs = _contended(sample_requests(n, seed=n))
+        arrays = as_arrays(reqs)
+        t = {}
+        for inc in (True, False):
+            priority_mapping_jax(arrays, PAPER_TABLE2, 8, jcfg, seed=0,
+                                 incremental=inc)          # warm the jit
+            _, t[inc] = timeit(priority_mapping_jax, arrays, PAPER_TABLE2,
+                               8, jcfg, seed=1, incremental=inc, repeat=3)
+        rows.append([f"table1_sa_jax_inc_n{n}_b8",
+                     round(t[True] * 1e6, 1),
+                     f"seconds={t[True]:.5f};full_eval={t[False]:.5f};"
+                     f"us_per_proposal={t[True] / props * 1e6:.2f};"
+                     f"full_us_per_proposal={t[False] / props * 1e6:.2f};"
+                     f"speedup={t[False] / t[True]:.2f}x"])
+    # --- multi-instance vmap: I instances in ONE jitted program vs a
+    # per-instance loop of single-instance calls.  The vmap's win is the
+    # amortization of fixed per-proposal (dispatch + Python) overhead
+    # across the fleet, so it is measured at a small chain count, where
+    # that overhead dominates; on accelerator hosts extra vmap lanes are
+    # close to free until the vector units saturate.
+    jcfg_m = dataclasses.replace(jcfg, num_chains=2)
+    n_inst, n_per = (2, 32) if quick else (4, 64)
+    arrays_list = [as_arrays(_contended(sample_requests(n_per, seed=100 + i)))
+                   for i in range(n_inst)]
+    priority_mapping_multi_jax(arrays_list, PAPER_TABLE2, 8, jcfg_m, seed=0)
+    _, t_multi = timeit(priority_mapping_multi_jax, arrays_list,
+                        PAPER_TABLE2, 8, jcfg_m, seed=1, repeat=3)
+
+    def _loop(seed):
+        for i, a in enumerate(arrays_list):
+            priority_mapping_jax(a, PAPER_TABLE2, 8, jcfg_m, seed=seed + i)
+    _loop(0)                                               # warm the jit
+    _, t_loop = timeit(_loop, 1, repeat=3)
+    rows.append([f"table1_sa_jax_multi_i{n_inst}_n{n_per}",
+                 round(t_multi * 1e6, 1),
+                 f"seconds={t_multi:.5f};per_instance_loop={t_loop:.5f};"
+                 f"speedup={t_loop / t_multi:.2f}x"])
     emit(rows, ["name", "us_per_call", "derived"], "table1_overhead")
     return rows
 

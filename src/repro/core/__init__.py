@@ -1,9 +1,15 @@
 """The paper's primary contribution: SLO-aware scheduling for LLM inference.
 
 Components: latency predictor (Eqs. 14-19), request profiler, simulated-
-annealing priority mapper (Algorithm 1), multi-instance scheduler
+annealing priority mapper (Algorithm 1) with two backends — the Python
+incremental-Δ annealer (:mod:`repro.core.annealing`) and the jitted
+batched annealer (:mod:`repro.core.annealing_jax`, vmapped over tempering
+chains and instances; imported lazily so the core stays importable
+without touching the JAX runtime) — multi-instance scheduler
 (Algorithm 2), objective G (Eq. 2), exhaustive-search oracle, and the
-discrete-event execution simulator used by the benchmarks.
+discrete-event execution simulator used by the benchmarks.  See
+docs/ARCHITECTURE.md for the layer map and docs/annealer.md for the
+annealer internals.
 
 Scheduling API v2 (:mod:`repro.core.policies`): runtime scheduling is
 expressed as two composable abstractions shared verbatim by the

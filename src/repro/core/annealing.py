@@ -20,6 +20,13 @@ full-``evaluate``-per-proposal oracle path, kept for cross-checking and
 benchmarking).  This is what keeps re-annealing cheap enough to run at
 every admission event (paper Table 1's sub-millisecond overhead).
 
+A jitted port of the same incremental-Δ data structures lives in
+:mod:`repro.core.annealing_jax` — batched over tempering chains AND over
+instances (Algorithm 2 as one vmapped program).  Both backends build
+their per-batch slack segments from ``objective.linear_request_coefs``
+and are cross-checked against the ``objective.evaluate`` oracle; see
+docs/annealer.md for the shared contract and when each backend wins.
+
 Acceptance: the paper's pseudocode line 32 (`exp(-(f_new-f)/T) < rand`)
 as literally printed never accepts a worse solution (the exponent is
 positive, so exp(·) > 1 > rand).  That degenerates to greedy descent and

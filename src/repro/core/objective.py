@@ -110,6 +110,44 @@ def sorted_by_e2e_schedule(arrays, model, max_batch: int):
 
 
 # ------------------------------------------------------------ incremental
+def linear_request_coefs(arrays: dict, model) -> dict:
+    """Per-request coefficients of the latency model, linear in batch size.
+
+    ``LinearLatencyModel`` (Eqs. 14-16) is linear in the batch size ``b``,
+    so every per-request quantity a schedule evaluator needs collapses to
+    a pair ``A·b + C`` precomputed once per request:
+
+      exec_time(b)    = eA·b + eC        (Eq. 17)
+      prefill_time(b) = pA·b + pC        (Eq. 18)
+      tpot(b)         = tA·b + tC        (Eq. 19, output length clamped
+                                          to >= 1 exactly as model.tpot)
+
+    This is the *shared contract* between the two incremental annealer
+    backends: :class:`IncrementalEvaluator` (Python hot loop) and the
+    jitted annealer (:mod:`repro.core.annealing_jax`) both build their
+    per-batch slack segments from these arrays, and both are cross-checked
+    against the full :func:`evaluate` oracle (see docs/annealer.md).
+
+    Returns a dict of float64 arrays: eA, eC, pA, pC, tA, tC.
+    """
+    li = np.asarray(arrays["input_len"], np.float64)
+    lo = np.asarray(arrays["output_len"], np.float64)
+    lo_c = np.maximum(lo, 1.0)
+    tri = li * lo + lo * (lo + 1) / 2.0              # Eq. 16 closed form
+    # model.tpot clamps l_o to 1 *before* recomputing the decode time,
+    # so the TPOT coefficients must be built from the clamped length
+    tri_c = li * lo_c + lo_c * (lo_c + 1) / 2.0
+    m = model
+    return {
+        "eA": m.alpha_p * li + m.beta_p + m.alpha_d * tri + m.beta_d * lo,
+        "eC": m.gamma_p * li + m.delta_p + m.gamma_d * tri + m.delta_d * lo,
+        "pA": m.alpha_p * li + m.beta_p,
+        "pC": m.gamma_p * li + m.delta_p,
+        "tA": (m.alpha_d * tri_c + m.beta_d * lo_c) / lo_c,
+        "tC": (m.gamma_d * tri_c + m.delta_d * lo_c) / lo_c,
+    }
+
+
 class _BatchStat:
     """Aggregates for one batch at its current size."""
     __slots__ = ("size", "sum_exec", "bdur", "slacks")
@@ -149,23 +187,14 @@ class IncrementalEvaluator:
     """
 
     def __init__(self, arrays: dict, model, batches: Sequence[Sequence[int]]):
-        li = np.asarray(arrays["input_len"], np.float64)
-        lo = np.asarray(arrays["output_len"], np.float64)
-        lo_c = np.maximum(lo, 1.0)
-        tri = li * lo + lo * (lo + 1) / 2.0          # Eq. 16 closed form
-        # model.tpot clamps l_o to 1 *before* recomputing the decode time,
-        # so the TPOT coefficients must be built from the clamped length
-        tri_c = li * lo_c + lo_c * (lo_c + 1) / 2.0
-        m = model
         # exec_time(b) = eA·b + eC ; prefill(b) = pA·b + pC ; tpot(b) = tA·b+tC
-        self._eA = (m.alpha_p * li + m.beta_p
-                    + m.alpha_d * tri + m.beta_d * lo).tolist()
-        self._eC = (m.gamma_p * li + m.delta_p
-                    + m.gamma_d * tri + m.delta_d * lo).tolist()
-        self._pA = (m.alpha_p * li + m.beta_p).tolist()
-        self._pC = (m.gamma_p * li + m.delta_p).tolist()
-        self._tA = ((m.alpha_d * tri_c + m.beta_d * lo_c) / lo_c).tolist()
-        self._tC = ((m.gamma_d * tri_c + m.delta_d * lo_c) / lo_c).tolist()
+        coefs = linear_request_coefs(arrays, model)
+        self._eA = coefs["eA"].tolist()
+        self._eC = coefs["eC"].tolist()
+        self._pA = coefs["pA"].tolist()
+        self._pC = coefs["pC"].tolist()
+        self._tA = coefs["tA"].tolist()
+        self._tC = coefs["tC"].tolist()
         self._h = [int(x) for x in arrays["h"]]
         self._se = [float(x) for x in arrays["slo_e2e"]]
         self._st = [float(x) for x in arrays["slo_ttft"]]

@@ -28,9 +28,10 @@ serving engine (``repro.engine.engine.Engine.run_policy``):
     between chunks — Sarathi-style).
 
 Policies and disciplines are constructible by string key through the
-registry (:func:`make`), e.g. ``make("slo-preempt", model=m)`` or
-``make("chunked:64")``, so launchers and benchmarks can select them from
-the command line.
+registry (:func:`make`), e.g. ``make("slo-preempt", model=m)``,
+``make("chunked:64")``, or ``make("slo-reanneal:jax", model=m,
+max_batch=8)`` (online re-annealing on the jitted annealer backend), so
+launchers and benchmarks can select them from the command line.
 
 The v1 ``AdmissionPolicy`` name survives for one release as a thin
 deprecation shim: subclasses implementing ``select`` are adapted into
@@ -231,24 +232,52 @@ class SLOReannealPolicy(SchedulingPolicy):
     event, with SLO budgets shrunk by the time each request already
     waited (on the executor's clock, via ``submit_time``).  The
     incremental-Δ annealer keeps this cheap enough to run on the
-    admission hot path (paper Table 1)."""
+    admission hot path (paper Table 1).
+
+    ``backend`` picks the annealer: ``"python"`` (default — the
+    ``objective.IncrementalEvaluator`` hot loop) or ``"jax"`` (the jitted
+    incremental annealer, ``annealing_jax.priority_mapping_jax`` — queue
+    depths are bucketed to powers of two so shifting queues reuse a few
+    compilations; see docs/annealer.md for when each backend wins)."""
 
     def __init__(self, model: LinearLatencyModel, max_batch: int,
-                 sa_params: Optional[SAParams] = None, min_queue: int = 2):
+                 sa_params: Optional[SAParams] = None, min_queue: int = 2,
+                 backend: str = "python"):
+        if backend not in ("python", "jax"):
+            raise ValueError(
+                f"backend must be 'python' or 'jax', got {backend!r}")
         self.model = model
         self.max_batch = max_batch
         self.sa_params = sa_params if sa_params is not None \
             else SAParams(seed=0)
         self.min_queue = min_queue
+        self.backend = backend
+        self._jax_cfg = None
+        if backend == "jax":
+            # validate the SAParams mapping up front — a jit-unsupported
+            # ablation config should fail at construction, not mid-run
+            # on the first admission event that reaches min_queue
+            from repro.core.annealing_jax import config_from_sa_params
+            self._jax_cfg = config_from_sa_params(self.sa_params)
+
+    def _anneal_perm(self, arrays) -> List[int]:
+        if self.backend == "jax":
+            from repro.core.annealing_jax import priority_mapping_jax
+            p = self.sa_params
+            perm, _, _ = priority_mapping_jax(
+                arrays, self.model, self.max_batch, self._jax_cfg,
+                seed=p.seed, incremental=p.incremental)
+            return [int(i) for i in perm]
+        sa = priority_mapping(arrays, self.model, self.max_batch,
+                              self.sa_params)
+        return [int(i) for i in sa.perm]
 
     def decide(self, view):
         pending = view.pending
         if len(pending) < self.min_queue:
             return Decision(admit=list(range(min(view.free, len(pending)))))
         shifted = [with_remaining_slo(r, view.now) for r in pending]
-        sa = priority_mapping(as_arrays(shifted), self.model,
-                              self.max_batch, self.sa_params)
-        return Decision(admit=[int(i) for i in sa.perm])
+        return Decision(admit=self._anneal_perm(as_arrays(shifted)))
 
 
 class SLOPreemptPolicy(SchedulingPolicy):
@@ -569,11 +598,14 @@ def _make_planned(batches=None, **_):
 
 @register("slo-reanneal")
 def _make_reanneal(model=None, max_batch=None, sa_params=None,
-                   min_queue=2, **_):
+                   min_queue=2, backend=None, arg=None, **_):
+    # "slo-reanneal:jax" selects the jitted annealer backend
+    if backend is None:
+        backend = arg if arg is not None else "python"
     return SLOReannealPolicy(_require(model, "model=...", "slo-reanneal"),
                              _require(max_batch, "max_batch=...",
                                       "slo-reanneal"),
-                             sa_params, min_queue)
+                             sa_params, min_queue, backend=backend)
 
 
 @register("slo-preempt")

@@ -54,7 +54,11 @@ class SLOAwareScheduler:
     output_predictor : fills Request.predicted_output_len when missing
     mapper : priority-mapping implementation; defaults to the Python
              simulated annealer (Algorithm 1). ``use_jax=True`` switches to
-             the jitted parallel-tempering annealer.
+             the jitted parallel-tempering annealer and batches ALL
+             instances through one vmapped program
+             (``annealing_jax.priority_mapping_multi_jax``);
+             ``sa_params.incremental`` picks its incremental-Δ or
+             full-evaluate scoring (see docs/annealer.md).
     """
 
     def __init__(self, model: LinearLatencyModel, num_instances: int = 1,
@@ -73,6 +77,14 @@ class SLOAwareScheduler:
         # shared mutable instance across every scheduler ever constructed
         self.sa_params = sa_params if sa_params is not None else SAParams()
         self.use_jax = use_jax
+        self._jax_cfg = None
+        if use_jax:
+            # map SAParams onto the jitted annealer's config (one
+            # temperature schedule AND one proposal budget for both
+            # backends) up front: a jit-unsupported ablation config
+            # should fail at construction, not inside schedule()
+            from repro.core.annealing_jax import config_from_sa_params
+            self._jax_cfg = config_from_sa_params(self.sa_params)
 
     # ------------------------------------------------ instance assignment
     def assign_instances(self, requests: Sequence[Request]
@@ -104,24 +116,25 @@ class SLOAwareScheduler:
                 elif r.output_len is not None:
                     r.predicted_output_len = r.output_len
         buckets = self.assign_instances(requests)
+        arrays_of = [as_arrays(b) if b else None for b in buckets]
+        jax_results = None
+        if self.use_jax:
+            # ONE jitted program anneals every instance: vmap over
+            # (instances × chains) with ragged loads padded and masked
+            from repro.core.annealing_jax import priority_mapping_multi_jax
+            jax_results = iter(priority_mapping_multi_jax(
+                [a for a in arrays_of if a is not None], self.model,
+                self.max_batch, self._jax_cfg, seed=self.sa_params.seed,
+                incremental=self.sa_params.incremental))
         queues, sa_results = [], []
         assignment = {}
         g_num, g_den = 0.0, 0.0
         for inst, bucket in enumerate(buckets):
             q = InstanceQueue(inst)
             if bucket:
-                arrays = as_arrays(bucket)
-                if self.use_jax:
-                    from repro.core.annealing_jax import (JaxSAConfig,
-                                                          priority_mapping_jax)
-                    perm, bid, g = priority_mapping_jax(
-                        arrays, self.model, self.max_batch,
-                        JaxSAConfig(T0=self.sa_params.T0,
-                                    T_thres=self.sa_params.T_thres,
-                                    iters=self.sa_params.iters,
-                                    tau=self.sa_params.tau),
-                        seed=self.sa_params.seed)
-                    res = SAResult(perm, bid, g, -1, False)
+                arrays = arrays_of[inst]
+                if jax_results is not None:
+                    res = SAResult(*next(jax_results), -1, False)
                 else:
                     res = priority_mapping(arrays, self.model,
                                            self.max_batch, self.sa_params)
