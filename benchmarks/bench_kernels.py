@@ -1,17 +1,146 @@
 """Kernel microbenchmarks: Pallas (interpret) correctness deltas vs oracle
 and XLA-reference timings on CPU.  On real TPU hardware the same harness
-times the compiled kernels."""
+times the compiled kernels.
+
+The ``paged_*`` rows are the paged-KV-pool acceptance metrics (also
+written to ``experiments/bench/BENCH_paged.json`` for the perf
+trajectory):
+
+* ``paged_decode`` — µs/token at equal live tokens: dense decode over
+  its worst-case-length slot vs paged decode gathering live pages only.
+* ``paged_commit`` — per-prefill slot-commit cost as the pool grows:
+  the dense layout's whole-slot ``.at[slot].set`` scatter is O(pool);
+  the paged in-place page scatter (jit buffer donation) stays flat.
+* ``paged_capacity`` — concurrent admissions at a fixed HBM budget on a
+  short-prompt mix: the paged pool prices HBM by live tokens, the dense
+  layout by ``max_slots × max_seq_len``.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import RESULTS_DIR, emit, timeit
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
+
+
+def _paged_rows(quick: bool):
+    """Paged-pool acceptance rows; returns (csv_rows, json_payload)."""
+    from repro.kernels.decode_attention_paged import decode_attention_paged
+    from repro.models import ModelConfig
+    from repro.models.cache import kv_bytes_per_token
+
+    rows, payload = [], {}
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, H, KV, hd, P = 4, 8, 2, 64, 16
+    live = 256 if quick else 512            # live tokens per sequence
+    Lmax = 2 * live                         # the dense slot's worst case
+    npg = live // P
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Lmax, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Lmax, KV, hd), jnp.float32)
+    nv = jnp.full((B,), live, jnp.int32)
+    null = jnp.zeros((1, P, KV, hd), jnp.float32)
+    kp = jnp.concatenate([null, kc[:, :live].reshape(-1, P, KV, hd)], 0)
+    vp = jnp.concatenate([null, vc[:, :live].reshape(-1, P, KV, hd)], 0)
+    bt = jnp.arange(1, 1 + B * npg, dtype=jnp.int32).reshape(B, npg)
+
+    # --- decode µs/token at equal live tokens (CPU: both XLA ref paths;
+    # on TPU the same harness times the compiled Pallas kernels)
+    fd = jax.jit(ref.decode_attention_ref)
+    fp = jax.jit(ref.decode_attention_paged_ref)
+    fd(q, kc, vc, nv).block_until_ready()
+    fp(q, kp, vp, bt, nv).block_until_ready()
+    _, td = timeit(lambda: fd(q, kc, vc, nv).block_until_ready(), repeat=5)
+    _, tp = timeit(lambda: fp(q, kp, vp, bt, nv).block_until_ready(),
+                   repeat=5)
+    # correctness of the Pallas kernel on this exact shape
+    err = float(jnp.max(jnp.abs(
+        decode_attention_paged(q, kp, vp, bt, nv, interpret=True)
+        - fp(q, kp, vp, bt, nv))))
+    ratio = tp / td
+    rows.append([f"paged_decode_live{live}", round(tp * 1e6, 1),
+                 f"vs_dense_slot{Lmax}={ratio:.3f};interpret_err={err:.1e}"])
+    payload["decode"] = {"live_tokens": live, "dense_slot_len": Lmax,
+                         "dense_us": td * 1e6, "paged_us": tp * 1e6,
+                         "paged_vs_dense": ratio, "interpret_err": err}
+
+    # --- per-prefill slot-commit cost vs pool size
+    S = 64                                  # committed prompt tokens
+    one = jax.random.normal(ks[1], (S, KV, hd), jnp.float32)
+    commit = {}
+    for slots in ((4, 16) if quick else (8, 64)):
+        # dense: whole-slot scatter into [slots, Lmax, KV, hd]
+        dense_pool = jnp.zeros((slots, Lmax, KV, hd))
+        slot_kv = jnp.zeros((Lmax, KV, hd)).at[:S].set(one)
+        fdc = jax.jit(lambda p, o: p.at[0].set(o))
+        fdc(dense_pool, slot_kv).block_until_ready()
+        _, tdc = timeit(
+            lambda: fdc(dense_pool, slot_kv).block_until_ready(), repeat=5)
+        # paged: O(S) scatter into [slots*npages, P, KV, hd], donated
+        npages = Lmax // P
+        fpc = jax.jit(lambda p, o, pg, of: p.at[pg, of].set(o),
+                      donate_argnums=0)
+        pg = jnp.repeat(jnp.arange(1, 1 + S // P, dtype=jnp.int32), P)
+        of = jnp.tile(jnp.arange(P, dtype=jnp.int32), S // P)
+        paged_pool = jnp.zeros((1 + slots * npages, P, KV, hd))
+        paged_pool = fpc(paged_pool, one, pg, of)       # warm (donates)
+        def run():
+            pool = jnp.zeros((1 + slots * npages, P, KV, hd))
+            pool.block_until_ready()
+            _, t = timeit(
+                lambda: fpc(pool, one, pg, of).block_until_ready(),
+                repeat=1)
+            return t
+        tpc = min(run() for _ in range(5))
+        commit[slots] = {"dense_us": tdc * 1e6, "paged_us": tpc * 1e6}
+        rows.append([f"paged_commit_slots{slots}", round(tpc * 1e6, 1),
+                     f"dense_us={tdc * 1e6:.1f};"
+                     f"paged_vs_dense={tpc / tdc:.4f}"])
+    lo, hi = sorted(commit)
+    payload["commit"] = {
+        "tokens": S, "per_slots": commit,
+        "paged_growth": commit[hi]["paged_us"] / commit[lo]["paged_us"],
+        "dense_growth": commit[hi]["dense_us"] / commit[lo]["dense_us"]}
+    rows.append(["paged_commit_growth",
+                 round(payload["commit"]["paged_growth"], 3),
+                 f"pool_x{hi // lo};"
+                 f"dense_growth={payload['commit']['dense_growth']:.2f}"])
+
+    # --- admission capacity at a fixed HBM budget (short-prompt mix)
+    cfg = ModelConfig(name="cap", family="dense", num_layers=16,
+                      d_model=2048, num_heads=16, num_kv_heads=4, d_ff=8192,
+                      vocab_size=32000, dtype="bfloat16")
+    bpt = kv_bytes_per_token(cfg)
+    max_seq = 4096
+    dense_slots = 8
+    hbm = dense_slots * max_seq * bpt       # the dense engine's KV budget
+    blocks = hbm // (P * bpt)
+    rng = np.random.default_rng(0)
+    admitted = 0
+    free = int(blocks)
+    while True:                             # short prompts + bounded output
+        need = -(-int(rng.integers(64, 512) + 256) // P)
+        if need > free:
+            break
+        free -= need
+        admitted += 1
+    rows.append(["paged_capacity", admitted,
+                 f"dense_slots={dense_slots};hbm_gb={hbm / 2**30:.2f};"
+                 f"capacity_x={admitted / dense_slots:.2f}"])
+    payload["capacity"] = {"hbm_bytes": int(hbm),
+                           "dense_concurrent": dense_slots,
+                           "paged_concurrent": admitted,
+                           "ratio": admitted / dense_slots}
+    return rows, payload
 
 
 def main(quick: bool = False):
@@ -64,6 +193,16 @@ def main(quick: bool = False):
     err = float(jnp.max(jnp.abs(y - yr)))
     rows.append([f"ssd_scan_{s}", round(t_ref * 1e6, 1),
                  f"interpret_err={err:.2e}"])
+
+    # paged KV pool: decode / slot-commit / capacity acceptance rows
+    paged_rows, payload = _paged_rows(quick)
+    rows.extend(paged_rows)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_paged.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# saved {path}")
+
     emit(rows, ["name", "us_per_call", "derived"], "kernels")
     return rows
 

@@ -62,6 +62,8 @@ class ActiveView:
     e2e_base: float         # clock origin of the request's e2e budget
     batch: int              # batch size used for the slack projection
     model: Optional[LinearLatencyModel]
+    # KV blocks this request holds in the paged pool (0: unpaged executor)
+    blocks_held: int = 0
 
     @functools.cached_property
     def slack(self) -> float:
@@ -90,12 +92,41 @@ class SchedulerView:
     # lets policies price prefill honestly (chunked prefill interleaves
     # decode rounds, so it lands later than a stalling prefill would)
     discipline: Optional["ExecutionDiscipline"] = None
+    # block-pool occupancy (paged-KV executors only; None/0 elsewhere):
+    # policies that see these can make admission/eviction memory-aware
+    free_blocks: Optional[int] = None
+    total_blocks: Optional[int] = None
+    block_size: int = 0
+    # pages covering one slot's ring — a request can never hold more
+    # (windowed slots wrap), so block-need estimates are capped by it
+    pages_per_slot: int = 0
 
     def pending_context_len(self, i: int) -> int:
         """Prefill length if ``pending[i]`` were admitted now."""
         gen = self.pending_generated[i] \
             if i < len(self.pending_generated) else 0
         return self.pending[i].input_len + gen
+
+    def blocks_for(self, tokens: int) -> int:
+        """KV blocks covering ``tokens`` (0 on unpaged executors),
+        capped at one slot's ring — matching the executor's own
+        reservation (``Engine._blocks_needed``)."""
+        if self.block_size <= 0:
+            return 0
+        n = -(-int(tokens) // self.block_size)
+        return min(n, self.pages_per_slot) if self.pages_per_slot else n
+
+    def pending_blocks(self, i: int) -> int:
+        """Blocks ``pending[i]`` needs if admitted now: its prefill
+        context plus its (predicted) output budget."""
+        r = self.pending[i]
+        try:
+            out = int(r.planning_output_len())
+        except (AttributeError, ValueError):
+            out = 0
+        gen = self.pending_generated[i] \
+            if i < len(self.pending_generated) else 0
+        return self.blocks_for(r.input_len + max(out, gen + 1))
 
 
 @dataclasses.dataclass
@@ -140,13 +171,14 @@ def compute_slack(request: Request, *, generated: int, remaining: int,
 def make_active_view(request: Request, generated: int, remaining: int,
                      context_len: int, now: float, ttft: Optional[float],
                      e2e_base: float, batch: int,
-                     model: Optional[LinearLatencyModel]) -> ActiveView:
+                     model: Optional[LinearLatencyModel],
+                     blocks_held: int = 0) -> ActiveView:
     """Build one :class:`ActiveView` — shared by the event core and the
     engine so both expose identical state to policies."""
     return ActiveView(request=request, generated=generated,
                       remaining=remaining, context_len=context_len,
                       ttft=ttft, now=now, e2e_base=e2e_base, batch=batch,
-                      model=model)
+                      model=model, blocks_held=blocks_held)
 
 
 def submit_base(r: Request) -> float:
@@ -289,6 +321,13 @@ class SLOPreemptPolicy(SchedulingPolicy):
     Admission order is urgency-first (smallest remaining TTFT/e2e
     budget).  Requests without a first-token-sensitive SLO never trigger
     an eviction.
+
+    On a paged-KV executor (``view.free_blocks`` is set) the policy is
+    memory-aware: admissions are filtered to what the free blocks cover,
+    a tight arrival short on *blocks* (not just slots) may trigger
+    eviction, victims are ranked by **freed blocks per unit of slack**
+    (most memory recovered at least deadline risk; no-SLO victims rank
+    first), and several victims may be evicted for one large arrival.
     """
 
     preemptive = True
@@ -349,15 +388,42 @@ class SLOPreemptPolicy(SchedulingPolicy):
             out.append((r.slo.e2e - waited, prefill + decode))
         return out, prefill
 
+    def _victim_order(self, view: SchedulerView) -> List[int]:
+        if view.free_blocks is None:
+            return sorted(range(len(view.active)),
+                          key=lambda j: view.active[j].slack, reverse=True)
+
+        # memory-aware ranking: blocks freed per unit of slack consumed.
+        # No-SLO victims (infinite slack) are free memory — rank first,
+        # largest holdings first; non-positive slack ranks last (the
+        # absorb guard rejects those anyway).
+        def vkey(j):
+            v = view.active[j]
+            if v.slack == math.inf:
+                return (2, v.blocks_held)
+            if v.slack > 0:
+                return (1, v.blocks_held / v.slack)
+            return (0, v.slack)
+        return sorted(range(len(view.active)), key=vkey, reverse=True)
+
     def decide(self, view):
         if not view.pending:
             return Decision()
         budgets = [self._budget(view, i) for i in range(len(view.pending))]
         order = sorted(range(len(view.pending)), key=budgets.__getitem__)
-        admit = order[:view.free]
+        avail = view.free_blocks            # None on unpaged executors
+        admit: List[int] = []
+        overflow: List[int] = []
+        for i in order:
+            need = view.pending_blocks(i) if avail is not None else 0
+            if len(admit) < view.free and (avail is None or need <= avail):
+                admit.append(i)
+                if avail is not None:
+                    avail -= need
+            else:
+                overflow.append(i)          # short a slot or short blocks
         preempt: List[int] = []
-        victims = sorted(range(len(view.active)),
-                         key=lambda j: view.active[j].slack, reverse=True)
+        victims = self._victim_order(view)
         vi = 0
         # modelled completion time of each running request: the k-th
         # arrival left waiting gets (at best) the k-th slot to free up
@@ -374,13 +440,14 @@ class SLOPreemptPolicy(SchedulingPolicy):
         urgent_service = sum(max((s for _, s in cons), default=0.0)
                              for cons, _ in cons_cache.values())
         queued = 0                          # arrivals left to wait so far
-        for i in order[view.free:]:
+        for i in overflow:
             if budgets[i] == math.inf:
                 break                       # sorted: the rest are ∞ too
             cons, _ = cons_cache[i]
             if any(bud < s + self.margin for bud, s in cons):
                 queued += 1                 # doomed, but it still claims
                 continue                    # a freeing slot later
+            need = view.pending_blocks(i) if avail is not None else 0
             remaining = sorted(c for j, c in comps.items()
                                if j not in preempt)
             # when waiters outnumber running requests the true wait is
@@ -391,19 +458,38 @@ class SLOPreemptPolicy(SchedulingPolicy):
             # contended benchmark)
             wait = remaining[min(queued, len(remaining) - 1)] \
                 if remaining else 0.0
+            # blocks, like slots, free naturally when runners finish — an
+            # arrival that can afford the wait never triggers an eviction
             if all(bud >= wait + s + self.margin for bud, s in cons):
                 queued += 1                 # makes it without eviction
                 continue
-            if vi >= len(victims):
-                break
-            v = view.active[victims[vi]]
-            recompute = self._prefill_cost(
-                view, v.request.input_len + v.generated)
-            if not (v.slack > recompute + urgent_service + self.margin):
-                queued += 1                 # victim can't absorb THIS
-                continue                    # arrival; try the next one
-            preempt.append(victims[vi])
-            vi += 1
+            # evict from vi onward until the blocks are covered (one
+            # victim always suffices on unpaged executors); every victim
+            # in the chain must absorb its own recompute
+            picked: List[int] = []
+            freed = 0
+            vj = vi
+            ok = False
+            while vj < len(victims):
+                j = victims[vj]
+                v = view.active[j]
+                recompute = self._prefill_cost(
+                    view, v.request.input_len + v.generated)
+                if not (v.slack > recompute + urgent_service + self.margin):
+                    break                   # victims can't absorb THIS
+                picked.append(j)            # arrival; try the next one
+                freed += v.blocks_held
+                vj += 1
+                if avail is None or need <= avail + freed:
+                    ok = True
+                    break
+            if not ok:
+                queued += 1
+                continue
+            preempt.extend(picked)
+            vi = vj
+            if avail is not None:
+                avail += freed - need
             admit.append(i)
         return Decision(admit=admit, preempt=preempt)
 

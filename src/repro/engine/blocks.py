@@ -1,0 +1,62 @@
+"""Host-side block accounting for the paged KV pool.
+
+The device side is a shared page array per layer plus per-slot block
+tables (``models/cache.init_paged_cache``); this module owns the
+free-list over page ids.  Block 0 is the **null page** — reserved as the
+scatter/gather target for dead slots and padded prefill tokens — so real
+allocations hand out ids ``1..num_blocks-1``.
+
+The pool's occupancy is the scheduler signal: the engine exposes
+``available``/``total`` through ``SchedulerView.free_blocks`` /
+``total_blocks`` so admission and preemption can be memory-aware.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+class BlockPool:
+    """Free-list allocator over ``num_blocks`` KV pages (id 0 reserved)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is the "
+                             "null page)")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently-freed (cache-warm) pages are reused first
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._held: set = set()
+
+    @property
+    def total(self) -> int:
+        """Allocatable blocks (excludes the null page)."""
+        return self.num_blocks - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` block ids; raises if the pool cannot cover them —
+        callers must check ``available`` first (admission refusal)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"out of KV blocks: need {n}, {len(self._free)} free "
+                f"of {self.total}")
+        ids = [self._free.pop() for _ in range(n)]
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        for i in ids:
+            if i not in self._held:
+                raise ValueError(f"block {i} is not allocated "
+                                 "(double free or foreign id)")
+            self._held.remove(i)
+            self._free.append(i)

@@ -1,9 +1,23 @@
 """Slot-based continuous-batching serving engine over the JAX model.
 
-Static-shape design (TPU-friendly): a fixed pool of ``max_slots`` KV-cache
-slots of length ``max_seq_len``; prefills are padded to power-of-two length
-buckets; the decode step always runs over the full slot pool with inactive
-slots masked.
+Static-shape design (TPU-friendly): a fixed pool of ``max_slots`` request
+slots; prefills are padded to power-of-two length buckets; the decode
+step always runs over the full slot pool with inactive slots masked.
+
+KV memory comes in two layouts.  The default is a **block-paged pool**
+(vLLM-style): one shared ``[num_blocks, block_size, ...]`` page array
+per layer plus per-slot block tables, sized in *tokens* rather than
+``max_slots × max_seq_len``.  Prefill K/V is written *in place* into the
+slot's pages (an O(prompt) scatter under jit buffer donation — no
+per-prefill full-length cache allocation and no O(pool) commit copy),
+blocks are allocated on admit and freed on finish/preempt, and decode
+attends through the block table (the Pallas paged flash-decode kernel on
+TPU).  Admission is memory-aware: a request is admitted only while free
+blocks cover its prompt + output budget, and the block-pool occupancy is
+exposed to policies through ``SchedulerView.free_blocks``.
+``paged=False`` restores the dense ``max_slots × max_seq_len`` layout
+(kept for comparison benchmarks); SSM-only archs always use it — their
+state is O(1) in sequence length, so there is nothing to page.
 
 Scheduling is delegated to the v2 API (:mod:`repro.core.policies`):
 ``run_policy`` accepts any :class:`SchedulingPolicy` — the same objects
@@ -38,11 +52,14 @@ from repro.core.policies import (ChunkedPrefill, ExecutionDiscipline,
                                  normalize_decision, resolve_policy)
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import meets_slo
+from repro.engine.blocks import BlockPool
 from repro.engine.request import Phase, RuntimeRequest
 from repro.engine.sampling import sample
-from repro.models.cache import init_cache
+from repro.models.cache import init_cache, init_paged_cache, paged_slot_len
 from repro.models.config import ModelConfig
-from repro.models.model import forward_chunk, forward_decode, forward_full
+from repro.models.model import (forward_chunk, forward_chunk_paged,
+                                forward_decode, forward_decode_paged,
+                                forward_full, forward_prefill_paged)
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -57,11 +74,20 @@ class Engine:
                  max_seq_len: int = 512, eos_token: int = -1,
                  temperature: float = 0.0, seed: int = 0,
                  profiler: Optional[LatencyProfiler] = None,
-                 chunked_prefill: int = 0):
+                 chunked_prefill: int = 0, paged: Optional[bool] = None,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
         """chunked_prefill > 0: split prompts into chunks of that size and
         interleave each chunk with a decode round for the running slots
         (Sarathi-style — new prompts no longer stall running decodes for
-        their whole prefill).  Unsupported for MLA archs (falls back)."""
+        their whole prefill).  Unsupported for MLA archs (falls back).
+
+        ``paged`` (default: True whenever the arch has attention layers)
+        selects the block-paged KV pool: ``num_blocks`` pages of
+        ``block_size`` tokens each (+ the reserved null page), defaulting
+        to the dense layout's capacity of ``max_slots`` full-length
+        slots.  Shrinking ``num_blocks`` trades HBM for admission
+        capacity — admission refuses requests whose prompt + output
+        budget exceeds the free blocks."""
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -71,13 +97,38 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.profiler = profiler
         self.clock = 0.0             # engine-internal wall clock
-        # slot pool: one batched cache over all slots
-        self.cache = init_cache(cfg, max_slots, max_seq_len)
+        if paged is None:
+            paged = bool(cfg.attn_layers)
+        self.paged = paged and bool(cfg.attn_layers)
         self.slot_free = [True] * max_slots
         self.slot_req: List[Optional[RuntimeRequest]] = [None] * max_slots
-        self._decode_fn = jax.jit(self._decode_step)
-        self._prefill_fn = jax.jit(self._prefill_one)  # recompiles per bucket
-        self._chunk_fn = jax.jit(self._prefill_chunk)
+        if self.paged:
+            self.block_size = block_size
+            self.slot_len = paged_slot_len(cfg, max_seq_len, block_size)
+            self.pages_per_slot = self.slot_len // block_size
+            if num_blocks is None:
+                num_blocks = max_slots * self.pages_per_slot + 1
+            self.num_blocks = num_blocks
+            self.pool = BlockPool(num_blocks)
+            self._slot_blocks: List[List[int]] = [[] for _ in
+                                                  range(max_slots)]
+            self.cache = init_paged_cache(cfg, max_slots, max_seq_len,
+                                          num_blocks, block_size)
+            # the paged step fns donate the cache: page writes are
+            # in-place scatters, never O(pool) copies
+            self._decode_fn = jax.jit(self._decode_step_paged,
+                                      donate_argnums=(1,))
+            self._prefill_fn = jax.jit(self._prefill_paged,
+                                       donate_argnums=(1,))
+            self._chunk_fn = jax.jit(self._prefill_chunk_paged,
+                                     donate_argnums=(1,))
+        else:
+            self.pool = None
+            # slot pool: one batched dense cache over all slots
+            self.cache = init_cache(cfg, max_slots, max_seq_len)
+            self._decode_fn = jax.jit(self._decode_step)
+            self._prefill_fn = jax.jit(self._prefill_one)  # per bucket
+            self._chunk_fn = jax.jit(self._prefill_chunk)
         self.chunked_prefill = 0 if cfg.mla is not None else chunked_prefill
         self._warm = set()
 
@@ -106,6 +157,69 @@ class Engine:
         cache["pos"] = jnp.full_like(cache["pos"], length)
         return logits[0, length - 1], cache
 
+    # ------------------------------------------------------- jitted paged
+    def _decode_step_paged(self, params, cache, tokens, active):
+        """Paged decode round.  KV pages need no inactive-slot freeze:
+        freed slots' block tables point at the null page, so their
+        (masked) token writes never touch live pages.  Per-slot state
+        (pos, SSM conv/ssm) is still frozen."""
+        logits, new_cache = forward_decode_paged(
+            params, self.cfg, tokens=tokens, cache=new_cache_arg(cache))
+
+        def keep(new, old):
+            mask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+        layers = []
+        for new_l, old_l in zip(new_cache["layers"], cache["layers"]):
+            if "conv" in new_l:
+                layers.append({k: keep(new_l[k], old_l[k]) for k in new_l})
+            else:
+                layers.append(new_l)
+        return logits[:, -1], {
+            "pos": jnp.where(active, new_cache["pos"], cache["pos"]),
+            "block_tables": new_cache["block_tables"], "layers": layers}
+
+    def _prefill_paged(self, params, cache, tokens, length, slot):
+        """Whole-prompt prefill written in place into ``slot``'s pages."""
+        return forward_prefill_paged(params, self.cfg, tokens=tokens,
+                                     cache=new_cache_arg(cache), slot=slot,
+                                     length=length)
+
+    def _prefill_chunk_paged(self, params, cache, tokens, slot):
+        """One chunk continuation for ``slot`` against the paged pool."""
+        return forward_chunk_paged(params, self.cfg, tokens=tokens,
+                                   cache=new_cache_arg(cache), slot=slot)
+
+    def _warm_paged(self, fn, *args):
+        """Compile-warm a donated-cache jitted fn without perturbing
+        engine state: snapshot the cache to host, run once, restore."""
+        saved = jax.tree.map(np.asarray, self.cache)
+        out = fn(self.params, self.cache, *args)
+        jax.block_until_ready(out)
+        self.cache = jax.tree.map(jnp.asarray, saved)
+
+    # ------------------------------------------------------------ blocks
+    def _blocks_needed(self, rt: RuntimeRequest) -> int:
+        """Pages covering the request's lifetime token footprint (prompt
+        + output budget, capped by the slot's ring length)."""
+        tokens = min(rt.input_len + rt.max_new_tokens, self.slot_len)
+        return -(-tokens // self.block_size)
+
+    def _assign_blocks(self, rt: RuntimeRequest, slot: int):
+        ids = self.pool.alloc(self._blocks_needed(rt))
+        self._slot_blocks[slot] = ids
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[:len(ids)] = ids
+        self.cache["block_tables"] = \
+            self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+
+    def _release_blocks(self, slot: int):
+        if self.paged and self._slot_blocks[slot]:
+            self.pool.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self.cache["block_tables"] = \
+                self.cache["block_tables"].at[slot].set(0)
+
     # ------------------------------------------------------------ slots
     def _write_slot(self, slot: int, cache1):
         """Copy a single-request cache into slot ``slot`` of the pool."""
@@ -131,29 +245,52 @@ class Engine:
 
     def prefill_chunked(self, rt: RuntimeRequest, slot: int):
         """Chunked prefill: process the prompt in chunks, running a decode
-        round for the other active slots between chunks."""
+        round for the other active slots between chunks.  In paged mode
+        every chunk is written in place into the slot's pages."""
         C = self.chunked_prefill
         ctx = self._context_tokens(rt)
         n = len(ctx)
         if n >= self.max_seq_len:
             raise ValueError(f"prefill context {n} >= max_seq_len")
-        from repro.models.cache import init_cache as _ic
-        cache1 = _ic(self.cfg, 1, self.max_seq_len)
+        if self.paged:
+            self._assign_blocks(rt, slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+            cache1 = None
+        else:
+            from repro.models.cache import init_cache as _ic
+            cache1 = _ic(self.cfg, 1, self.max_seq_len)
         logits = None
         i = 0
         while i < n:
             chunk = ctx[i: i + C]
-            toks = np.asarray(chunk, np.int32)[None]
-            # exact-size final chunk (jit recompiles per distinct size only)
+            toks = jnp.asarray(np.asarray(chunk, np.int32)[None])
+            # warm the jit cache per chunk size so first-seen compile
+            # time never pollutes the engine clock / profiler samples
+            if ("chunk", len(chunk)) not in self._warm:
+                if self.paged:
+                    self._warm_paged(self._chunk_fn, toks, slot)
+                else:
+                    self._chunk_fn(self.params, cache1,
+                                   toks)[0].block_until_ready()
+                self._warm.add(("chunk", len(chunk)))
             t0 = time.perf_counter()
-            logits, cache1 = self._chunk_fn(self.params, cache1,
-                                            jnp.asarray(toks))
+            if self.paged:
+                logits, self.cache = self._chunk_fn(self.params, self.cache,
+                                                    toks, slot)
+            else:
+                logits, cache1 = self._chunk_fn(self.params, cache1, toks)
             logits.block_until_ready()
-            self.clock += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.clock += dt
+            if self.profiler is not None:
+                # chunk continuations are prefill work: feed them to the
+                # latency-model fit like whole-prompt prefills
+                self.profiler.observe_prefill(1, len(chunk), dt)
             i += len(chunk)
             if i < n:
                 self.decode_round()     # running slots keep decoding
-        self._write_slot(slot, cache1)
+        if not self.paged:
+            self._write_slot(slot, cache1)
         self.slot_free[slot] = False
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
@@ -177,20 +314,32 @@ class Engine:
         L = n if self.cfg.ssm_layers else _bucket(n)
         toks = np.zeros((1, L), np.int32)
         toks[0, :n] = ctx
+        if self.paged:
+            self._assign_blocks(rt, slot)
         # warm the jit cache for this bucket so compile time never
         # pollutes the engine clock / profiler samples
         if ("prefill", L) not in self._warm:
-            self._prefill_fn(self.params, jnp.asarray(toks),
-                             n)[0].block_until_ready()
+            if self.paged:
+                self._warm_paged(self._prefill_fn, jnp.asarray(toks), n,
+                                 slot)
+            else:
+                self._prefill_fn(self.params, jnp.asarray(toks),
+                                 n)[0].block_until_ready()
             self._warm.add(("prefill", L))
         t0 = time.perf_counter()
-        logits, cache1 = self._prefill_fn(self.params, jnp.asarray(toks), n)
+        if self.paged:
+            logits, self.cache = self._prefill_fn(self.params, self.cache,
+                                                  jnp.asarray(toks), n, slot)
+        else:
+            logits, cache1 = self._prefill_fn(self.params, jnp.asarray(toks),
+                                              n)
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         self.clock += dt
         if self.profiler is not None:
             self.profiler.observe_prefill(1, n, dt)
-        self._write_slot(slot, cache1)
+        if not self.paged:
+            self._write_slot(slot, cache1)
         self.slot_free[slot] = False
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
@@ -202,12 +351,14 @@ class Engine:
         self._push_token(rt, tok)
 
     def preempt(self, rt: RuntimeRequest):
-        """Evict a running request: free its slot and discard its KV.
-        The generated tokens and TTFT are kept; the next prefill of this
+        """Evict a running request: free its slot and discard its KV
+        (paged: its blocks return to the pool immediately).  The
+        generated tokens and TTFT are kept; the next prefill of this
         request recomputes prompt + generated (cost charged as a normal
         prefill)."""
         if rt.slot < 0 or self.slot_req[rt.slot] is not rt:
             raise ValueError(f"request {rt.req_id} is not running")
+        self._release_blocks(rt.slot)
         self.slot_free[rt.slot] = True
         self.slot_req[rt.slot] = None
         rt.slot = -1
@@ -220,6 +371,7 @@ class Engine:
                 len(rt.generated) >= rt.max_new_tokens:
             rt.phase = Phase.FINISHED
             rt.finish_time = self.clock
+            self._release_blocks(rt.slot)
             self.slot_free[rt.slot] = True
             self.slot_req[rt.slot] = None
 
@@ -236,8 +388,12 @@ class Engine:
         accum = int(np.max([rt.input_len + len(rt.generated)
                             for rt in self.slot_req if rt is not None]))
         if "decode" not in self._warm:
-            self._decode_fn(self.params, self.cache, jnp.asarray(tokens),
-                            jnp.asarray(active_np))[0].block_until_ready()
+            if self.paged:
+                self._warm_paged(self._decode_fn, jnp.asarray(tokens),
+                                 jnp.asarray(active_np))
+            else:
+                self._decode_fn(self.params, self.cache, jnp.asarray(tokens),
+                                jnp.asarray(active_np))[0].block_until_ready()
             self._warm.add("decode")
         t0 = time.perf_counter()
         logits, self.cache = self._decode_fn(
@@ -337,13 +493,21 @@ class Engine:
                         rt.request, len(rt.generated),
                         rt.max_new_tokens - len(rt.generated),
                         rt.input_len + len(rt.generated), self.clock,
-                        rt.ttft_time, rt.submit_time, b, model)
+                        rt.ttft_time, rt.submit_time, b, model,
+                        blocks_held=(len(self._slot_blocks[rt.slot])
+                                     if self.paged else 0))
                         for rt in active_rts),
                     now=self.clock, free=len(free),
                     max_batch=self.max_slots,
                     pending_generated=tuple(len(rt.generated)
                                             for rt in waiting),
-                    discipline=disc)
+                    discipline=disc,
+                    free_blocks=(self.pool.available if self.paged
+                                 else None),
+                    total_blocks=(self.pool.total if self.paged else None),
+                    block_size=(self.block_size if self.paged else 0),
+                    pages_per_slot=(self.pages_per_slot if self.paged
+                                    else 0))
                 admit, preempt = normalize_decision(pol.decide(view), view)
                 for j in preempt:
                     vict = active_rts[j]
@@ -355,7 +519,17 @@ class Engine:
                     waiting.append(vict)        # view indices stay valid
                     admitted = True
                 free = self.free_slots()
-                sel = admit[:len(free)]
+                sel = []
+                avail = self.pool.available if self.paged else None
+                for j in admit:
+                    if len(sel) >= len(free):
+                        break
+                    if avail is not None:
+                        need = self._blocks_needed(waiting[j])
+                        if need > avail:
+                            continue    # out of KV blocks: keep waiting
+                        avail -= need
+                    sel.append(j)
                 chosen = [waiting[j] for j in sel]
                 for j in sorted(sel, reverse=True):
                     waiting.pop(j)
@@ -370,6 +544,15 @@ class Engine:
                     self.clock = max(self.clock,
                                      t0 + future[fi].request.arrival_time)
                 elif waiting:
+                    if self.paged and all(
+                            self._blocks_needed(rt) > self.pool.available
+                            for rt in waiting):
+                        rt = waiting[0]
+                        raise ValueError(
+                            f"request {rt.req_id} needs "
+                            f"{self._blocks_needed(rt)} KV blocks but only "
+                            f"{self.pool.available} exist: prompt + output "
+                            "budget exceeds the block pool")
                     raise RuntimeError("admission stalled: policy admitted "
                                        "nothing while the engine was idle")
         return self._collect(rts)
@@ -408,5 +591,8 @@ class Engine:
 
 def new_cache_arg(cache):
     """Shallow rebuild so jit donation aliasing never mutates caller state."""
-    return {"pos": cache["pos"],
-            "layers": [dict(l) for l in cache["layers"]]}
+    out = {"pos": cache["pos"],
+           "layers": [dict(l) for l in cache["layers"]]}
+    if "block_tables" in cache:
+        out["block_tables"] = cache["block_tables"]
+    return out

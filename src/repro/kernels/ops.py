@@ -13,6 +13,9 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention_paged import (
+    decode_attention_paged as _decode_paged_pallas,
+    decode_attention_paged_q8 as _decode_paged_q8_pallas)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -47,6 +50,34 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, block_k=256):
         return _ref.decode_attention_ref(q, k_cache, v_cache, n_valid)
     return _decode_pallas(q, k_cache, v_cache, n_valid, block_k=block_k,
                           interpret=(mode == "interpret"))
+
+
+def decode_attention_paged(q, k_pages, v_pages, block_tables, lengths, *,
+                           window=0):
+    """Flash-decode through a block table (paged KV pool)."""
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.decode_attention_paged_ref(q, k_pages, v_pages,
+                                               block_tables, lengths,
+                                               window=window)
+    return _decode_paged_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                window=window,
+                                interpret=(mode == "interpret"))
+
+
+def decode_attention_paged_q8(q, k_pages, k_scale, v_pages, v_scale,
+                              block_tables, lengths, *, window=0):
+    """int8-KV paged flash-decode (per-(token, head) bf16 scales)."""
+    mode = _resolved()
+    if mode == "ref":
+        from repro.models.cache import dequantize_kv
+        kf = dequantize_kv(k_pages, k_scale)
+        vf = dequantize_kv(v_pages, v_scale)
+        return _ref.decode_attention_paged_ref(q, kf, vf, block_tables,
+                                               lengths, window=window)
+    return _decode_paged_q8_pallas(q, k_pages, k_scale, v_pages, v_scale,
+                                   block_tables, lengths, window=window,
+                                   interpret=(mode == "interpret"))
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk=64):

@@ -52,6 +52,43 @@ def decode_attention_ref(q, k_cache, v_cache, n_valid, *,
                       v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q, k_pages, v_pages, block_tables, lengths,
+                               *, window: int = 0,
+                               scale: float | None = None):
+    """Paged flash-decode oracle: gather live pages into the logical
+    [B, L, kv, hd] view, then token-id ring masking.
+
+    q: [B,H,hd]; pages: [N,P,KV,hd]; block_tables: [B,pages_per_seq];
+    lengths: [B] int32 (context length incl. current token). -> [B,H,hd].
+    """
+    b, h, hd = q.shape
+    P = k_pages.shape[1]
+    kv = k_pages.shape[2]
+    num_pages = block_tables.shape[1]
+    L = num_pages * P
+    k_cache = k_pages[block_tables].reshape(b, L, kv, hd)
+    v_cache = v_pages[block_tables].reshape(b, L, kv, hd)
+    rep = h // kv
+    if rep > 1:
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scale = scale if scale is not None else hd ** -0.5
+    scores = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    # ring slot s holds token t_s = len-1 - mod(len-1-s, L); mask slots
+    # not yet written (t_s < 0) and, for windowed archs, evicted tokens
+    ln = lengths[:, None]
+    s_idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+    t_s = ln - 1 - jnp.mod(ln - 1 - s_idx, L)
+    valid = t_s >= 0
+    if window > 0:
+        valid &= t_s > ln - 1 - window
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhl,blhd->bhd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, B, C, chunk: int, init_state=None):
     """Sequential (non-chunked) SSD recurrence oracle.
 

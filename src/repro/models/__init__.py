@@ -1,11 +1,15 @@
 from repro.models.config import (ATTN, SSM, MLAConfig, MoEConfig, ModelConfig,
                                  SSMConfig, reduced)
-from repro.models.model import (forward_decode, forward_full, init_params)
-from repro.models.cache import cache_spec, init_cache
+from repro.models.model import (forward_decode, forward_decode_paged,
+                                forward_full, forward_prefill_paged,
+                                init_params)
+from repro.models.cache import (cache_spec, init_cache, init_paged_cache,
+                                kv_bytes_per_token)
 from repro.models.moe import ShardingCtx
 
 __all__ = [
     "ATTN", "SSM", "MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig",
-    "reduced", "forward_decode", "forward_full", "init_params",
-    "cache_spec", "init_cache", "ShardingCtx",
+    "reduced", "forward_decode", "forward_decode_paged", "forward_full",
+    "forward_prefill_paged", "init_params", "cache_spec", "init_cache",
+    "init_paged_cache", "kv_bytes_per_token", "ShardingCtx",
 ]

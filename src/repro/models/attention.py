@@ -320,23 +320,22 @@ def mla_decode(params, cfg, x, positions, ckv_cache, kpe_cache, cache_pos):
     return jnp.dot(out, params["wo"]), ckv_cache, kpe_cache
 
 
-def gqa_continue(params, cfg, x, positions, k_cache, v_cache, start_pos):
-    """Chunked-prefill continuation (Sarathi-style): a chunk of C tokens at
-    absolute positions [start_pos, start_pos+C) attends to the cached
-    prefix plus itself, then writes itself into the cache.
+def _chunk_attend(params, cfg, x, positions, k_prefix, v_prefix, start_pos):
+    """Shared chunk-continuation attention over a materialized prefix.
 
-    Ring-safe: the cache may be a window ring (slot t%L holds token t).
-    Attention is computed in two parts — prefix (ring, token-id masked) and
-    the fresh chunk (intra-chunk causal) — BEFORE the chunk is written, so
-    in-chunk evictions cannot clobber keys still needed by earlier queries.
-    Requires C <= L.
+    A chunk of C tokens at absolute positions [start_pos, start_pos+C)
+    attends to the cached prefix (ring, token-id masked) plus itself
+    (intra-chunk causal).  The caller writes the chunk's K/V into its
+    cache layout (dense ring or paged pool) afterwards, so in-chunk
+    evictions cannot clobber keys still needed by earlier queries.
 
-    x: [B, C, D]; k_cache/v_cache: [B, L, kv, hd]; start_pos: int/traced.
-    Returns (out [B,C,D], new_k_cache, new_v_cache).
+    x: [B, C, D]; k_prefix/v_prefix: [B, L, kv, hd] (the logical cache
+    view); start_pos: int/traced.  Returns (out [B,C,D], k_chunk,
+    v_chunk [B,C,kv,hd]).
     """
     b, c, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    L = k_cache.shape[1]
+    L = k_prefix.shape[1]
     assert c <= L, "chunk larger than the cache ring"
     q = jnp.dot(x, params["wq"]).reshape(b, c, h, hd)
     k = jnp.dot(x, params["wk"]).reshape(b, c, kv, hd)
@@ -363,7 +362,7 @@ def gqa_continue(params, cfg, x, positions, k_cache, v_cache, start_pos):
     if window > 0:
         m_pre &= t_slot > qpos - window
     s_pre = jnp.einsum("bqgrd,blgd->bgrql", qg,
-                       k_cache.astype(qg.dtype)) * scale
+                       k_prefix.astype(qg.dtype)) * scale
     s_pre = jnp.where(m_pre[None, None, None], s_pre.astype(jnp.float32),
                       NEG_INF)
 
@@ -379,12 +378,221 @@ def gqa_continue(params, cfg, x, positions, k_cache, v_cache, start_pos):
     scores = jnp.concatenate([s_pre, s_chk], axis=-1)          # [b,g,r,q,L+c]
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bgrql,blgd->bqgrd", probs[..., :L],
-                     v_cache.astype(probs.dtype)) + \
+                     v_prefix.astype(probs.dtype)) + \
         jnp.einsum("bgrqc,bcgd->bqgrd", probs[..., L:], v)
     out = out.reshape(b, c, h * hd)
+    return jnp.dot(out, params["wo"]), k, v
 
+
+def gqa_continue(params, cfg, x, positions, k_cache, v_cache, start_pos):
+    """Chunked-prefill continuation (Sarathi-style) on the dense layout.
+
+    Ring-safe: the cache may be a window ring (slot t%L holds token t).
+    x: [B, C, D]; k_cache/v_cache: [B, L, kv, hd]; start_pos: int/traced.
+    Returns (out [B,C,D], new_k_cache, new_v_cache).
+    """
+    L = k_cache.shape[1]
+    c = x.shape[1]
+    out, k, v = _chunk_attend(params, cfg, x, positions, k_cache, v_cache,
+                              start_pos)
     # ---- deferred ring write of the chunk
+    sp = jnp.asarray(start_pos, jnp.int32)
     widx = jnp.mod(sp + jnp.arange(c, dtype=jnp.int32), L)
     k_cache = k_cache.at[:, widx].set(k.astype(k_cache.dtype))
     v_cache = v_cache.at[:, widx].set(v.astype(v_cache.dtype))
-    return jnp.dot(out, params["wo"]), k_cache, v_cache
+    return out, k_cache, v_cache
+
+
+# ============================================================== paged GQA
+def _paged_write_token(layer_cache, k, v, block_tables, cache_pos,
+                       quantized: bool):
+    """Write one new token per sequence into its page (O(B) scatter).
+
+    k/v: [B, 1, kv, hd]; returns the updated layer dict."""
+    from repro.models.cache import paged_token_write, quantize_kv
+    P = layer_cache["k"].shape[1]
+    L = block_tables.shape[1] * P
+    widx = jnp.mod(cache_pos, L)                              # [B]
+    page_ids = jnp.take_along_axis(block_tables, (widx // P)[:, None],
+                                   axis=1)[:, 0]
+    offs = jnp.mod(widx, P)
+    if quantized:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {
+            "k": paged_token_write(layer_cache["k"], kq[:, 0], page_ids, offs),
+            "v": paged_token_write(layer_cache["v"], vq[:, 0], page_ids, offs),
+            "k_scale": paged_token_write(layer_cache["k_scale"], ks[:, 0],
+                                         page_ids, offs),
+            "v_scale": paged_token_write(layer_cache["v_scale"], vs[:, 0],
+                                         page_ids, offs),
+        }
+    return {
+        "k": paged_token_write(layer_cache["k"], k[:, 0], page_ids, offs),
+        "v": paged_token_write(layer_cache["v"], v[:, 0], page_ids, offs),
+    }
+
+
+def gqa_decode_paged(params, cfg, x, positions, layer_cache, block_tables,
+                     cache_pos):
+    """One-token decode against the paged KV pool.
+
+    x: [B, 1, D]; layer_cache: {"k","v"[,"k_scale","v_scale"]} page
+    arrays [N, P, kv, hd]; block_tables: [B, pages_per_slot] int32;
+    cache_pos: [B] int32.  The new token is written in place into its
+    page (O(B), not O(pool)), then attention runs through the block
+    table — the Pallas paged flash-decode kernel on TPU, the gather
+    reference on CPU (``kernels.ops`` dispatch).
+    Returns (out [B,1,D], new layer dict).
+    """
+    from repro.kernels import ops
+    from repro.models.cache import dequantize_kv, gather_pages
+    b, s, d = x.shape
+    assert s == 1
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, 1, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    quant = "k_scale" in layer_cache
+    new_cache = _paged_write_token(layer_cache, k, v, block_tables,
+                                   cache_pos, quant)
+    lengths = cache_pos + 1
+    if cfg.attn_logit_softcap:
+        # the paged kernel (like the dense one) has no logit softcap —
+        # gather the live pages and run the einsum path
+        P = new_cache["k"].shape[1]
+        L = block_tables.shape[1] * P
+        k_eff = gather_pages(new_cache["k"], block_tables)
+        v_eff = gather_pages(new_cache["v"], block_tables)
+        if quant:
+            k_eff = dequantize_kv(k_eff, gather_pages(new_cache["k_scale"],
+                                                      block_tables))
+            v_eff = dequantize_kv(v_eff, gather_pages(new_cache["v_scale"],
+                                                      block_tables))
+        rep = h // kv
+        qg = q.reshape(b, kv, rep, hd)
+        scores = jnp.einsum("bgrd,blgd->bgrl", qg,
+                            k_eff.astype(qg.dtype)) \
+            / jnp.sqrt(hd).astype(x.dtype)
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+        ln = lengths[:, None]
+        s_idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+        t_s = ln - 1 - jnp.mod(ln - 1 - s_idx, L)
+        valid = t_s >= 0
+        if cfg.sliding_window > 0:
+            valid &= t_s > ln - 1 - cfg.sliding_window
+        scores = jnp.where(valid[:, None, None, :],
+                           scores.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bgrl,blgd->bgrd", probs,
+                       v_eff.astype(probs.dtype)).reshape(b, h, hd)
+    elif quant:
+        o = ops.decode_attention_paged_q8(
+            q[:, 0], new_cache["k"], new_cache["k_scale"], new_cache["v"],
+            new_cache["v_scale"], block_tables, lengths,
+            window=cfg.sliding_window)
+    else:
+        o = ops.decode_attention_paged(
+            q[:, 0], new_cache["k"], new_cache["v"], block_tables, lengths,
+            window=cfg.sliding_window)
+    out = o.astype(x.dtype).reshape(b, 1, h * hd)
+    return jnp.dot(out, params["wo"]), new_cache
+
+
+def gqa_continue_paged(params, cfg, x, positions, layer_cache, block_tables,
+                       start_pos):
+    """Chunked-prefill continuation on the paged pool (single slot).
+
+    x: [B, C, D] (B = 1 slot); the prefix is gathered through the block
+    table (dequantized for int8 caches), the chunk is scattered into its
+    pages afterwards (O(C); quantized with fresh per-token scales).
+    Returns (out [B,C,D], new layer dict).
+    """
+    from repro.models.cache import (dequantize_kv, gather_pages,
+                                    paged_prefill_write, quantize_kv)
+    c = x.shape[1]
+    quant = "k_scale" in layer_cache
+    k_prefix = gather_pages(layer_cache["k"], block_tables)
+    v_prefix = gather_pages(layer_cache["v"], block_tables)
+    if quant:
+        k_prefix = dequantize_kv(k_prefix,
+                                 gather_pages(layer_cache["k_scale"],
+                                              block_tables))
+        v_prefix = dequantize_kv(v_prefix,
+                                 gather_pages(layer_cache["v_scale"],
+                                              block_tables))
+    out, k, v = _chunk_attend(params, cfg, x, positions, k_prefix, v_prefix,
+                              start_pos)
+    bt = block_tables[0]
+
+    def write(pages, vals):
+        return paged_prefill_write(pages, vals[0], bt, c, start=start_pos)
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return out, {"k": write(layer_cache["k"], kq),
+                     "v": write(layer_cache["v"], vq),
+                     "k_scale": write(layer_cache["k_scale"], ks),
+                     "v_scale": write(layer_cache["v_scale"], vs)}
+    return out, {"k": write(layer_cache["k"], k),
+                 "v": write(layer_cache["v"], v)}
+
+
+def mla_decode_paged(params, cfg, x, positions, ckv_pages, kpe_pages,
+                     block_tables, cache_pos):
+    """Absorbed MLA decode against paged latent caches.
+
+    The new latent token is written in place into its page, then the
+    live pages are gathered into the logical [B, L, rank] view and the
+    dense absorbed-decode math runs on it (the latent is too narrow for
+    a per-kv-head kernel tile; capacity, not decode reads, is what
+    paging buys MLA archs).  Returns (out, new_ckv_pages, new_kpe_pages).
+    """
+    from repro.models.cache import gather_pages, paged_token_write
+    m = cfg.mla
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.num_heads
+    nope, rope_d, vhd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    rank = m.kv_lora_rank
+    P = ckv_pages.shape[1]
+    L = block_tables.shape[1] * P
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, nope + rope_d)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    c_kv = rmsnorm(jnp.dot(x, params["w_dkv"]), params["kv_norm"],
+                   cfg.norm_eps)                              # [B,1,rank]
+    k_pe = jnp.dot(x, params["w_krope"]).reshape(b, 1, 1, rope_d)
+    cos, sin = rope_cos_sin(positions, rope_d, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe, cos, sin)[:, :, 0, :]             # [B,1,rope_d]
+    widx = jnp.mod(cache_pos, L)
+    page_ids = jnp.take_along_axis(block_tables, (widx // P)[:, None],
+                                   axis=1)[:, 0]
+    offs = jnp.mod(widx, P)
+    ckv_pages = paged_token_write(ckv_pages, c_kv[:, 0], page_ids, offs)
+    kpe_pages = paged_token_write(kpe_pages, k_pe[:, 0], page_ids, offs)
+    ckv = gather_pages(ckv_pages, block_tables)               # [B,L,rank]
+    kpe = gather_pages(kpe_pages, block_tables)               # [B,L,rope_d]
+    n_valid = jnp.minimum(cache_pos + 1, L)
+    w_uk = params["w_uk"].reshape(rank, h, nope)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / jnp.sqrt(nope + rope_d)
+    scores = (jnp.einsum("bhr,blr->bhl", q_abs.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhd,bld->bhl", q_pe[:, 0].astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", probs,
+                     ckv.astype(jnp.float32)).astype(x.dtype)
+    w_uv = params["w_uv"].reshape(rank, h, vhd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * vhd)
+    return jnp.dot(out, params["wo"]), ckv_pages, kpe_pages

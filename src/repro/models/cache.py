@@ -10,6 +10,19 @@ Layer kinds:
   attn  -> {"k": [B,L,kv,hd], "v": [B,L,kv,hd]}
   mla   -> {"ckv": [B,L,rank], "kpe": [B,L,rope_d]}
   ssm   -> {"conv": [B,K-1,conv_ch], "ssm": [B,nh,hd,ds] f32}
+
+Two layouts share those kinds:
+
+* **dense** (``init_cache``): one contiguous ``[B, L, ...]`` buffer per
+  layer — HBM is priced by worst-case length per slot.
+* **paged** (``init_paged_cache``): one shared block pool
+  ``[num_blocks, block_size, ...]`` per layer plus per-slot block tables
+  ``[B, pages_per_slot]`` — HBM is priced by *live tokens* (vLLM-style
+  PagedAttention adapted to the static-shape TPU engine).  Block 0 is a
+  reserved **null page**: unallocated table entries point at it and
+  padded prefill tokens scatter into it, so every gather/scatter stays
+  in-bounds without host-side masking.  SSM recurrent state stays
+  per-slot (it is O(1) in sequence length).
 """
 from __future__ import annotations
 
@@ -95,6 +108,182 @@ def quantize_kv(x):
 
 def dequantize_kv(q, scale):
     return q.astype(jnp.bfloat16) * scale
+
+
+# ================================================================== paged
+NULL_PAGE = 0           # reserved block: scatter/gather target for dead slots
+
+
+def paged_slot_len(cfg: ModelConfig, max_len: int, block_size: int,
+                   window: int = 0) -> int:
+    """Logical per-slot ring length, rounded up to whole blocks."""
+    L = cache_len(cfg, max_len)
+    if window:
+        L = min(L, window)
+    return -(-L // block_size) * block_size
+
+
+def init_paged_cache(cfg: ModelConfig, max_slots: int, max_len: int,
+                     num_blocks: int, block_size: int = 16, dtype=None,
+                     window: int = 0, quantized: bool = False):
+    """Block-paged KV pool shared by ``max_slots`` request slots.
+
+    {
+      "pos":          [B] int32
+      "block_tables": [B, pages_per_slot] int32   # 0 == null page
+      "layers":       [per-layer dict]
+    }
+
+    attn -> {"k": [num_blocks, block_size, kv, hd], "v": ...}
+            (+ "k_scale"/"v_scale" [num_blocks, block_size, kv, 1] when
+            ``quantized``)
+    mla  -> {"ckv": [num_blocks, block_size, rank], "kpe": [..., rope_d]}
+    ssm  -> per-slot, identical to the dense layout.
+    """
+    if dtype is None:
+        dtype = jnp.dtype(cfg.dtype)
+    if num_blocks < 2:
+        raise ValueError("num_blocks must be >= 2 (block 0 is the null page)")
+    P = block_size
+    layers = []
+    for kind in cfg.layer_pattern:
+        if kind == SSM:
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            layers.append({
+                "conv": jnp.zeros((max_slots, s.d_conv - 1,
+                                   di + 2 * s.d_state), dtype),
+                "ssm": jnp.zeros((max_slots, s.n_heads(cfg.d_model),
+                                  s.head_dim, s.d_state), jnp.float32),
+            })
+        elif cfg.mla is not None:
+            m = cfg.mla
+            layers.append({
+                "ckv": jnp.zeros((num_blocks, P, m.kv_lora_rank), dtype),
+                "kpe": jnp.zeros((num_blocks, P, m.qk_rope_head_dim), dtype),
+            })
+        else:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            if quantized:
+                layers.append({
+                    "k": jnp.zeros((num_blocks, P, kv, hd), jnp.int8),
+                    "v": jnp.zeros((num_blocks, P, kv, hd), jnp.int8),
+                    "k_scale": jnp.zeros((num_blocks, P, kv, 1),
+                                         jnp.bfloat16),
+                    "v_scale": jnp.zeros((num_blocks, P, kv, 1),
+                                         jnp.bfloat16),
+                })
+            else:
+                layers.append({
+                    "k": jnp.zeros((num_blocks, P, kv, hd), dtype),
+                    "v": jnp.zeros((num_blocks, P, kv, hd), dtype),
+                })
+    pages_per_slot = paged_slot_len(cfg, max_len, P, window) // P
+    return {"pos": jnp.zeros((max_slots,), jnp.int32),
+            "block_tables": jnp.zeros((max_slots, pages_per_slot),
+                                      jnp.int32),
+            "layers": layers}
+
+
+def paged_token_write(pages, vals, page_ids, offs):
+    """Scatter one token per sequence into the pool.
+
+    pages: [N, P, ...]; vals: [B, ...]; page_ids/offs: [B] int32.
+    O(B) — independent of pool size (and in-place under jit donation)."""
+    return pages.at[page_ids, offs].set(vals.astype(pages.dtype))
+
+
+def paged_prefill_write(pages, vals, block_table, n, start=0):
+    """Scatter a prefilled span of ONE slot into its pages.
+
+    pages: [N, P, ...]; vals: [S, ...] (first ``n`` rows valid — the rest
+    are padding); block_table: [pages_per_slot] int32; positions are
+    ``start .. start+S-1`` on the slot's logical ring of length
+    ``pages_per_slot * P``.  Padding rows and ring-evicted rows (when the
+    span wraps) are routed to the null page, so duplicate in-bound
+    indices never race.  O(S) — no O(pool) commit copy."""
+    S = vals.shape[0]
+    P = pages.shape[1]
+    L = block_table.shape[0] * P
+    p = start + jnp.arange(S, dtype=jnp.int32)
+    end = start + n
+    keep = (p < end) & (p >= end - L)
+    widx = jnp.mod(p, L)
+    page_ids = jnp.where(keep, block_table[widx // P], NULL_PAGE)
+    return pages.at[page_ids, jnp.mod(widx, P)].set(vals.astype(pages.dtype))
+
+
+def write_prefill_paged(cache, layer_idx: int, kv_tuple, cfg: ModelConfig,
+                        slot, n):
+    """Paged counterpart of :func:`write_prefill`: write one request's
+    full-sequence K/V (or latent / SSM state) produced by a prefill pass
+    into ``slot``'s pages at positions [0, n).  ``kv_tuple`` entries are
+    [1, S, ...] (S >= n; tail is padding)."""
+    layer = cache["layers"][layer_idx]
+    bt = cache["block_tables"][slot]
+    if "ssm" in layer:
+        conv, ssm = kv_tuple
+        layer = {"conv": layer["conv"].at[slot].set(
+                     conv[0].astype(layer["conv"].dtype)),
+                 "ssm": layer["ssm"].at[slot].set(ssm[0])}
+    elif "ckv" in layer:
+        ckv, kpe = kv_tuple
+        layer = {
+            "ckv": paged_prefill_write(layer["ckv"], ckv[0], bt, n),
+            "kpe": paged_prefill_write(layer["kpe"], kpe[0], bt, n),
+        }
+    else:
+        k, v = kv_tuple
+        if "k_scale" in layer:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            layer = {
+                "k": paged_prefill_write(layer["k"], kq[0], bt, n),
+                "v": paged_prefill_write(layer["v"], vq[0], bt, n),
+                "k_scale": paged_prefill_write(layer["k_scale"], ks[0],
+                                               bt, n),
+                "v_scale": paged_prefill_write(layer["v_scale"], vs[0],
+                                               bt, n),
+            }
+        else:
+            layer = {
+                "k": paged_prefill_write(layer["k"], k[0], bt, n),
+                "v": paged_prefill_write(layer["v"], v[0], bt, n),
+            }
+    cache["layers"][layer_idx] = layer
+    return cache
+
+
+def gather_pages(pages, block_tables):
+    """Materialize the logical [B, L, ...] view of a paged layer.
+
+    pages: [N, P, ...]; block_tables: [B, pages_per_slot].  Gathers live
+    pages only — the XLA fallback for the Pallas paged-decode kernel and
+    the chunked-prefill prefix read."""
+    b, npg = block_tables.shape
+    g = pages[block_tables]                     # [B, pages, P, ...]
+    return g.reshape((b, npg * pages.shape[1]) + pages.shape[2:])
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype=None,
+                       quantized: bool = False) -> int:
+    """HBM bytes of KV (or MLA latent) cache per token, across layers.
+    SSM layers contribute 0 (their state is O(1) in sequence length)."""
+    if dtype is None:
+        dtype = jnp.dtype(cfg.dtype)
+    size = jnp.dtype(dtype).itemsize
+    total = 0
+    for kind in cfg.layer_pattern:
+        if kind == SSM:
+            continue
+        if cfg.mla is not None:
+            total += (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * size
+        elif quantized:
+            # int8 values + one bf16 scale per (token, head) for k and v
+            total += 2 * cfg.num_kv_heads * (cfg.head_dim * 1 + 2)
+        else:
+            total += 2 * cfg.num_kv_heads * cfg.head_dim * size
+    return total
 
 
 def _ring_write(buf, vals):

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import ssm as ssm_mod
-from repro.models.cache import write_prefill
+from repro.models.cache import write_prefill, write_prefill_paged
 from repro.models.config import ATTN, SSM, ModelConfig
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
 from repro.models.moe import ShardingCtx, init_moe, moe_ffn
@@ -248,6 +248,150 @@ def forward_decode(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     x = apply_norm(x, params["final_norm"], cfg)
     logits = lm_head(params, cfg, x)
     return logits, {"pos": cache_pos + 1, "layers": new_layers}
+
+
+def forward_decode_paged(params, cfg: ModelConfig, *, tokens=None,
+                         embeds=None, positions=None, cache=None,
+                         ctx: Optional[ShardingCtx] = None):
+    """One-token decode step against a paged KV pool.
+
+    ``cache`` is an :func:`repro.models.cache.init_paged_cache` pytree:
+    attention layers hold shared page arrays plus per-slot block tables;
+    SSM layers keep their per-slot state.  New tokens are written in
+    place into their pages (O(B) scatter) and attention reads through
+    the block table.  Returns (logits, new_cache).
+    """
+    assert cache is not None
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+    b = x.shape[0]
+    cache_pos = cache["pos"]
+    block_tables = cache["block_tables"]
+    if positions is None:
+        pos = cache_pos[:, None]
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+        positions = pos
+    new_layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        block = params["layers"][i] or params.get("shared_block")
+        layer_cache = cache["layers"][i]
+        if kind == SSM:
+            h, conv, st = ssm_mod.mamba2_decode(
+                block["mamba"], cfg, apply_norm(x, block["norm"], cfg),
+                layer_cache["conv"], layer_cache["ssm"])
+            x = x + h
+            new_layers.append({"conv": conv, "ssm": st})
+            continue
+        xin = apply_norm(x, block["attn_norm"], cfg)
+        if cfg.mla is not None:
+            h, ckv, kpe = attn.mla_decode_paged(
+                block["attn"], cfg, xin, positions, layer_cache["ckv"],
+                layer_cache["kpe"], block_tables, cache_pos)
+            new_lc = {"ckv": ckv, "kpe": kpe}
+        else:
+            h, new_lc = attn.gqa_decode_paged(
+                block["attn"], cfg, xin, positions, layer_cache,
+                block_tables, cache_pos)
+        x = x + h
+        y = apply_norm(x, block["mlp_norm"], cfg)
+        if "moe" in block:
+            y, _ = moe_ffn(block["moe"], cfg, y, ctx)
+        else:
+            y = apply_mlp(y, block["mlp"], cfg)
+        x = x + y
+        new_layers.append(new_lc)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_head(params, cfg, x)
+    return logits, {"pos": cache_pos + 1, "block_tables": block_tables,
+                    "layers": new_layers}
+
+
+def forward_prefill_paged(params, cfg: ModelConfig, *, tokens=None,
+                          embeds=None, positions=None, cache=None,
+                          slot=0, length=None,
+                          ctx: Optional[ShardingCtx] = None):
+    """Whole-prompt prefill of ONE request written *in place* into
+    ``slot``'s pages of the shared pool (no per-prefill full-length
+    cache allocation, no O(pool) commit copy — each layer's K/V is an
+    O(prompt) scatter through the slot's block table; padded positions
+    land on the null page).
+
+    tokens: [1, Lpad]; ``length``: actual prompt length.  Returns
+    (last-token logits [V], new_cache).
+    """
+    assert cache is not None
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+    b, s = x.shape[0], x.shape[1]
+    if length is None:
+        length = s
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    for i, kind in enumerate(cfg.layer_pattern):
+        block = params["layers"][i] or params.get("shared_block")
+        if kind == SSM:
+            h, state = ssm_mod.mamba2_full(
+                block["mamba"], cfg, apply_norm(x, block["norm"], cfg))
+            x = x + h
+            kv_out = state
+        else:
+            x, kv_out, _ = _attn_block_full(block, cfg, x, positions, ctx)
+        cache = write_prefill_paged(cache, i, kv_out, cfg, slot, length)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_head(params, cfg, x[:, length - 1][:, None])
+    cache["pos"] = cache["pos"].at[slot].set(length)
+    return logits[0, 0], cache
+
+
+def forward_chunk_paged(params, cfg: ModelConfig, *, tokens=None,
+                        embeds=None, cache=None, slot=0,
+                        ctx: Optional[ShardingCtx] = None):
+    """Chunked-prefill step for ONE slot against the paged pool
+    (Sarathi-style).  The chunk attends to the slot's gathered prefix
+    pages plus itself, then is scattered into its pages in place.
+
+    tokens: [1, C].  Returns (chunk-final logits [1,1,V], new_cache).
+    """
+    assert cache is not None
+    assert cfg.mla is None, "chunked prefill: MLA not supported"
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+    b, c = x.shape[0], x.shape[1]
+    pos0 = cache["pos"][slot]
+    bt = jax.lax.dynamic_slice_in_dim(cache["block_tables"], slot, 1)
+    positions = pos0 + jnp.arange(c, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (b, c))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[..., None], (b, c, 3))
+    for i, kind in enumerate(cfg.layer_pattern):
+        block = params["layers"][i] or params.get("shared_block")
+        layer_cache = cache["layers"][i]
+        if kind == SSM:
+            h, (conv, st) = ssm_mod.mamba2_full(
+                block["mamba"], cfg, apply_norm(x, block["norm"], cfg),
+                conv_state=jax.lax.dynamic_slice_in_dim(
+                    layer_cache["conv"], slot, 1).astype(x.dtype),
+                ssm_state=jax.lax.dynamic_slice_in_dim(
+                    layer_cache["ssm"], slot, 1))
+            x = x + h
+            cache["layers"][i] = {
+                "conv": layer_cache["conv"].at[slot].set(
+                    conv[0].astype(layer_cache["conv"].dtype)),
+                "ssm": layer_cache["ssm"].at[slot].set(st[0])}
+        else:
+            xin = apply_norm(x, block["attn_norm"], cfg)
+            h, new_lc = attn.gqa_continue_paged(
+                block["attn"], cfg, xin, positions, layer_cache, bt, pos0)
+            x = x + h
+            y = apply_norm(x, block["mlp_norm"], cfg)
+            if "moe" in block:
+                y, _ = moe_ffn(block["moe"], cfg, y, ctx)
+            else:
+                y = apply_mlp(y, block["mlp"], cfg)
+            x = x + y
+            cache["layers"][i] = new_lc
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_head(params, cfg, x[:, -1:])
+    cache["pos"] = cache["pos"].at[slot].add(c)
+    return logits, cache
 
 
 def forward_chunk(params, cfg: ModelConfig, *, tokens=None, embeds=None,

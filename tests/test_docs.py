@@ -9,7 +9,8 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC_FILES = [ROOT / "README.md",
              ROOT / "docs" / "ARCHITECTURE.md",
-             ROOT / "docs" / "annealer.md"]
+             ROOT / "docs" / "annealer.md",
+             ROOT / "docs" / "paged_kv.md"]
 
 
 def _python_blocks():
@@ -26,7 +27,8 @@ def _python_blocks():
 
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
-    for page in ("docs/ARCHITECTURE.md", "docs/annealer.md"):
+    for page in ("docs/ARCHITECTURE.md", "docs/annealer.md",
+                 "docs/paged_kv.md"):
         assert page in readme, f"README does not link {page}"
         assert (ROOT / page).exists(), f"{page} missing"
 
