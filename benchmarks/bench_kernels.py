@@ -14,6 +14,11 @@ trajectory):
 * ``paged_capacity`` — concurrent admissions at a fixed HBM budget on a
   short-prompt mix: the paged pool prices HBM by live tokens, the dense
   layout by ``max_slots × max_seq_len``.
+
+The ``prefix_*`` rows are the shared-prefix KV reuse acceptance metrics
+(written to ``experiments/bench/BENCH_prefix.json``): engine prefill
+time/tokens vs prefix hit rate, and concurrent admissions at a 1 GiB KV
+budget with 90 %-shared prompts vs the exclusive pool.
 """
 from __future__ import annotations
 
@@ -143,6 +148,108 @@ def _paged_rows(quick: bool):
     return rows, payload
 
 
+def _prefix_rows(quick: bool):
+    """Shared-prefix KV reuse acceptance rows; returns
+    (csv_rows, json_payload):
+
+    * ``prefix_prefill_hit*`` — engine prefill wall time and computed
+      tokens vs prefix hit rate on a shared-system-prompt mix: at 90 %
+      shared the engine prefills only the unique tail.
+    * ``prefix_capacity_1gib`` — concurrent admissions at a 1 GiB KV
+      budget with 90 %-shared prompts: refcounted aliasing vs the PR-5
+      exclusive pool.
+    """
+    from repro.core.slo import SLO, Request
+    from repro.engine.engine import Engine
+    from repro.engine.request import RuntimeRequest
+    from repro.models import ModelConfig, init_params
+    from repro.models.cache import kv_bytes_per_token
+
+    rows, payload = [], {}
+    cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    total = 160                             # prompt tokens per request
+    n_req = 4 if quick else 8
+
+    class _Rec:                             # prefill (tokens, seconds)
+        def __init__(self):
+            self.samples = []
+
+        def observe_prefill(self, b, l, t):
+            self.samples.append((int(l), float(t)))
+
+        def observe_decode(self, b, l, t):
+            pass
+
+    def run(shared_frac):
+        rng = np.random.default_rng(0)
+        shared_len = (int(total * shared_frac) // 16) * 16
+        head = rng.integers(0, 128, shared_len)
+        rts = []
+        for i in range(n_req):
+            toks = np.concatenate(
+                [head, rng.integers(0, 128, total - shared_len)]).astype(
+                np.int32)
+            rts.append(RuntimeRequest(
+                request=Request(req_id=i, task_type="chat",
+                                input_len=total,
+                                slo=SLO(ttft=60.0, tpot=10.0)),
+                prompt_tokens=toks, max_new_tokens=4))
+        rec = _Rec()
+        eng = Engine(cfg, params, max_slots=n_req, max_seq_len=512,
+                     temperature=0.0, profiler=rec)
+        eng.run_fcfs(rts)
+        toks_done = sum(l for l, _ in rec.samples)
+        t_pref = sum(t for _, t in rec.samples)
+        return (toks_done, t_pref, eng.prefix_stats()["hit_rate"])
+
+    base_toks, base_t, _ = run(0.0)
+    payload["prefill"] = {"prompt_tokens": total, "requests": n_req,
+                          "sweep": {}}
+    for frac in (0.5, 0.9):
+        toks_done, t_pref, hit = run(frac)
+        payload["prefill"]["sweep"][str(frac)] = {
+            "hit_rate": hit, "prefill_tokens": toks_done,
+            "prefill_s": t_pref,
+            "tokens_vs_unshared": toks_done / base_toks,
+            "time_vs_unshared": t_pref / base_t if base_t else 0.0}
+        rows.append([f"prefix_prefill_hit{int(frac * 100)}",
+                     round(t_pref * 1e6, 1),
+                     f"hit_rate={hit:.3f};"
+                     f"tokens={toks_done}/{base_toks};"
+                     f"time_vs_unshared={t_pref / base_t:.3f}"])
+
+    # --- capacity at 1 GiB with 90% shared prefixes (host arithmetic,
+    # production-scale config): exclusive pool vs refcounted aliasing
+    big = ModelConfig(name="cap", family="dense", num_layers=16,
+                      d_model=2048, num_heads=16, num_kv_heads=4,
+                      d_ff=8192, vocab_size=32000, dtype="bfloat16")
+    P = 16
+    bpt = kv_bytes_per_token(big)
+    blocks = (1 << 30) // (P * bpt)         # 1 GiB of KV pages
+    prompt, out_budget = 2048, 256
+    shared_blocks = (int(prompt * 0.9) // P)
+    need_full = -(-(prompt + out_budget) // P)
+    need_unique = need_full - shared_blocks
+    excl = int(blocks // need_full)
+    shared = 0
+    free = int(blocks)
+    while free >= (need_full if shared == 0 else need_unique):
+        free -= need_full if shared == 0 else need_unique
+        shared += 1
+    rows.append(["prefix_capacity_1gib", shared,
+                 f"exclusive={excl};shared_x={shared / max(excl, 1):.2f};"
+                 f"prompt={prompt};shared_frac=0.9"])
+    payload["capacity_1gib"] = {
+        "blocks": int(blocks), "prompt_tokens": prompt,
+        "output_budget": out_budget, "shared_frac": 0.9,
+        "exclusive_concurrent": excl, "shared_concurrent": shared,
+        "ratio": shared / max(excl, 1)}
+    return rows, payload
+
+
 def main(quick: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
@@ -201,6 +308,14 @@ def main(quick: bool = False):
     path = os.path.join(RESULTS_DIR, "BENCH_paged.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
+    print(f"# saved {path}")
+
+    # shared-prefix reuse: prefill-vs-hit-rate / 1 GiB capacity rows
+    prefix_rows, prefix_payload = _prefix_rows(quick)
+    rows.extend(prefix_rows)
+    path = os.path.join(RESULTS_DIR, "BENCH_prefix.json")
+    with open(path, "w") as f:
+        json.dump(prefix_payload, f, indent=2)
     print(f"# saved {path}")
 
     emit(rows, ["name", "us_per_call", "derived"], "kernels")

@@ -104,6 +104,53 @@ def _engine_rows(quick: bool):
     return rows
 
 
+def _multiturn_rows(quick: bool):
+    """Multi-turn chat rows on the engine's prefix cache: conversations
+    extend their own prior turns and share system prompts, so turn-2+
+    prompts alias cached pages.  Reports the token-level prefix hit
+    rate and SLO attainment, prefix sharing on vs off (same arrivals,
+    same model)."""
+    import jax
+
+    from repro.data.synthetic import sample_multiturn_token_requests
+    from repro.engine.engine import Engine
+    from repro.engine.request import RuntimeRequest
+    from repro.models import ModelConfig, init_params
+
+    cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_conv = 3 if quick else 5
+
+    def make_rts():
+        pairs = sample_multiturn_token_requests(
+            n_conv, turns=3, vocab=128, seed=2, system_prompt_len=48,
+            n_system_prompts=2, max_new_tokens=4, think_time=0.02)
+        out = []
+        for r, toks in pairs:
+            r.slo = SLO(ttft=0.5, tpot=0.5)
+            out.append(RuntimeRequest(request=r, prompt_tokens=toks,
+                                      max_new_tokens=r.output_len))
+        return out
+
+    rows = []
+    for on in (True, False):
+        eng = Engine(cfg, params, max_slots=4, max_seq_len=512,
+                     temperature=0.0, prefix_cache=on)
+        out, dt = timeit(eng.run_policy, make_rts(), "fcfs",
+                         respect_arrivals=True, repeat=1)
+        att = sum(v["met"] for v in out.values()) / len(out)
+        stats = eng.prefix_stats()
+        cached = sum(v["cached"] for v in out.values())
+        rows.append([f"engine_multiturn_prefix_{'on' if on else 'off'}",
+                     round(dt * 1e6, 1),
+                     f"att={att:.3f};hit_rate={stats['hit_rate']:.3f};"
+                     f"cached_tokens={cached};"
+                     f"cow_copies={stats['cow_copies']}"])
+    return rows
+
+
 def main(quick: bool = False):
     rows = []
     rng = np.random.default_rng(0)
@@ -155,6 +202,9 @@ def main(quick: bool = False):
     # --- engine-backed rows: the same policies on a real reduced-config
     # Engine.run_policy (paged KV pool), not just the event core
     rows.extend(_engine_rows(quick))
+    # --- multi-turn mix on the prefix cache: hit rate + attainment,
+    # sharing on vs off
+    rows.extend(_multiturn_rows(quick))
     emit(rows, ["name", "us_per_call", "derived"], "online")
     return rows
 

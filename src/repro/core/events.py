@@ -168,6 +168,15 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
     def arr_of(r: Request) -> float:
         return r.arrival_time if respect_arrivals else 0.0
 
+    def cp_of(r: Request) -> int:
+        """Cached-prefix tokens (shared-prefix KV reuse): that span of
+        the prompt is aliased, not computed, so prefill is charged for
+        the unique suffix only.  Clipped below the prompt length — at
+        least one token is always computed.  Survives preemption: the
+        prefix index owns the pages, so a re-prefill skips them again."""
+        cp = int(getattr(r, "cached_prefix", 0) or 0)
+        return min(max(cp, 0), r.input_len - 1)
+
     future = sorted(requests, key=arr_of)          # stable for ties
     fi = 0
     pending: List[Request] = []
@@ -222,9 +231,12 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
     def run_prefill(inst: _Instance, admitted: List[Request]):
         """Execute the admitted set's prefill under the discipline."""
         if disc.chunk_size <= 0:
-            # batched whole-prompt prefill; running decodes stall
+            # batched whole-prompt prefill; running decodes stall.
+            # Prefill computes the unique span only (cached prefix
+            # aliased) — but decode, below, attends the full context.
             b = len(admitted)
-            lens = [r.input_len + carry.get(r.req_id, {}).get("gen", 0)
+            lens = [r.input_len - cp_of(r)
+                    + carry.get(r.req_id, {}).get("gen", 0)
                     for r in admitted]
             inst.clock += max(model.prefill_time(b, ln)
                               * _noise(rng, noise_sigma) for ln in lens)
@@ -238,7 +250,7 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
         for r in admitted:
             st = carry.pop(r.req_id, None)
             gen0 = st["gen"] if st else 0
-            plen = r.input_len + gen0
+            plen = r.input_len - cp_of(r) + gen0
             done = 0
             while done < plen:
                 c = min(disc.chunk_size, plen - done)
@@ -279,7 +291,8 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
                 pending_generated=tuple(
                     carry.get(r.req_id, {}).get("gen", 0)
                     for r in pending),
-                discipline=disc)
+                discipline=disc,
+                pending_cached=tuple(cp_of(r) for r in pending))
             admit, preempt = normalize_decision(pol.decide(view), view)
             # preemption: evict, discard KV, requeue (indices into
             # view.pending stay valid — preempted go to the tail)

@@ -38,7 +38,12 @@ class LinearLatencyModel:
     delta_d: float
 
     # ---------------- Eq. 14
-    def prefill_time(self, b, l_i):
+    def prefill_time(self, b, l_i, cached=0):
+        """``cached`` prompt tokens already in KV (shared-prefix reuse)
+        are not computed: the prefill term is priced at the *unique*
+        length ``l_i - cached``.  Decode terms keep the full context —
+        cached pages are still attended."""
+        l_i = l_i - cached
         return (self.alpha_p * b * l_i + self.beta_p * b
                 + self.gamma_p * l_i + self.delta_p)
 
@@ -54,11 +59,12 @@ class LinearLatencyModel:
                 + (self.beta_d * b + self.delta_d) * l_o)
 
     # ---------------- Eqs. 17, 18, 19
-    def exec_time(self, b, l_i, l_o):
-        return self.prefill_time(b, l_i) + self.decode_time(b, l_i, l_o)
+    def exec_time(self, b, l_i, l_o, cached=0):
+        return self.prefill_time(b, l_i, cached) \
+            + self.decode_time(b, l_i, l_o)
 
-    def ttft_exec(self, b, l_i):
-        return self.prefill_time(b, l_i)
+    def ttft_exec(self, b, l_i, cached=0):
+        return self.prefill_time(b, l_i, cached)
 
     def tpot(self, b, l_i, l_o):
         l_o = np.maximum(l_o, 1)

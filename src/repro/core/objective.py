@@ -52,14 +52,18 @@ def evaluate(arrays: dict, model: LinearLatencyModel, perm: np.ndarray,
     slo_e2e = arrays["slo_e2e"][perm]
     slo_ttft = arrays["slo_ttft"][perm]
     slo_tpot = arrays["slo_tpot"][perm]
+    cp = _cached_col(arrays)
+    cp = cp[perm] if cp is not None else 0.0
 
     n = len(perm)
     nb = int(batch_id[-1]) + 1 if n else 0
     bsz = np.bincount(batch_id, minlength=nb).astype(np.float64)
     b_of = bsz[batch_id]                                  # batch size per pos
 
-    t_exec = model.exec_time(b_of, li, lo)                # Eq. 17
-    t_pref = model.prefill_time(b_of, li)                 # Eq. 18
+    # shared-prefix reuse: prefill is priced at the unique new tokens
+    # (l_i - cached_prefix); decode keeps the full context l_i
+    t_exec = model.exec_time(b_of, li, lo, cached=cp)     # Eq. 17
+    t_pref = model.prefill_time(b_of, li, cached=cp)      # Eq. 18
     t_tpot = model.tpot(b_of, li, lo)                     # Eq. 19
 
     # batch duration = max member exec; wait = cumsum of previous batches
@@ -109,6 +113,16 @@ def sorted_by_e2e_schedule(arrays, model, max_batch: int):
     return perm, batch_id
 
 
+def _cached_col(arrays: dict):
+    """Per-request cached-prefix column (``slo.as_arrays``), clipped to
+    [0, l_i - 1]; None when the workload carries no prefix metadata."""
+    cp = arrays.get("cached_prefix")
+    if cp is None:
+        return None
+    li = np.asarray(arrays["input_len"], np.float64)
+    return np.clip(np.asarray(cp, np.float64), 0.0, np.maximum(li - 1, 0.0))
+
+
 # ------------------------------------------------------------ incremental
 def linear_request_coefs(arrays: dict, model) -> dict:
     """Per-request coefficients of the latency model, linear in batch size.
@@ -133,16 +147,23 @@ def linear_request_coefs(arrays: dict, model) -> dict:
     li = np.asarray(arrays["input_len"], np.float64)
     lo = np.asarray(arrays["output_len"], np.float64)
     lo_c = np.maximum(lo, 1.0)
+    # shared-prefix reuse: prefill coefficients are built from the
+    # *unique* prompt span l_i - cached_prefix (exec = that prefill plus
+    # the full-context decode; TPOT is decode-only, so untouched) — this
+    # single discount is what makes BOTH annealer backends rank
+    # cached-prefix requests by their true (shorter) prefill
+    cp = _cached_col(arrays)
+    lp = li - cp if cp is not None else li
     tri = li * lo + lo * (lo + 1) / 2.0              # Eq. 16 closed form
     # model.tpot clamps l_o to 1 *before* recomputing the decode time,
     # so the TPOT coefficients must be built from the clamped length
     tri_c = li * lo_c + lo_c * (lo_c + 1) / 2.0
     m = model
     return {
-        "eA": m.alpha_p * li + m.beta_p + m.alpha_d * tri + m.beta_d * lo,
-        "eC": m.gamma_p * li + m.delta_p + m.gamma_d * tri + m.delta_d * lo,
-        "pA": m.alpha_p * li + m.beta_p,
-        "pC": m.gamma_p * li + m.delta_p,
+        "eA": m.alpha_p * lp + m.beta_p + m.alpha_d * tri + m.beta_d * lo,
+        "eC": m.gamma_p * lp + m.delta_p + m.gamma_d * tri + m.delta_d * lo,
+        "pA": m.alpha_p * lp + m.beta_p,
+        "pC": m.gamma_p * lp + m.delta_p,
         "tA": (m.alpha_d * tri_c + m.beta_d * lo_c) / lo_c,
         "tC": (m.gamma_d * tri_c + m.delta_d * lo_c) / lo_c,
     }

@@ -62,7 +62,9 @@ class ActiveView:
     e2e_base: float         # clock origin of the request's e2e budget
     batch: int              # batch size used for the slack projection
     model: Optional[LinearLatencyModel]
-    # KV blocks this request holds in the paged pool (0: unpaged executor)
+    # KV blocks ONLY this request holds in the paged pool — pages shared
+    # with other requests or pinned by the prefix index are excluded,
+    # because evicting this request would not free them (0: unpaged)
     blocks_held: int = 0
 
     @functools.cached_property
@@ -100,12 +102,34 @@ class SchedulerView:
     # pages covering one slot's ring — a request can never hold more
     # (windowed slots wrap), so block-need estimates are capped by it
     pages_per_slot: int = 0
+    # cached-prefix tokens per pending entry (shared-prefix KV reuse):
+    # the executor's prefix index already holds that span's pages, so
+    # admission prices only the unique new tokens/blocks.  Empty when
+    # the executor has no prefix cache; falls back to
+    # ``Request.cached_prefix`` (workload/simulator metadata).
+    pending_cached: Tuple[int, ...] = ()
 
     def pending_context_len(self, i: int) -> int:
-        """Prefill length if ``pending[i]`` were admitted now."""
+        """Context length if ``pending[i]`` were admitted now (prompt +
+        carried generated tokens; decode attends all of it)."""
         gen = self.pending_generated[i] \
             if i < len(self.pending_generated) else 0
         return self.pending[i].input_len + gen
+
+    def pending_cached_len(self, i: int) -> int:
+        """Cached-prefix tokens of ``pending[i]`` — KV the executor can
+        alias, skipping that span of prefill.  Clipped below the context
+        length so at least one token is always priced as computed."""
+        if i < len(self.pending_cached):
+            cp = self.pending_cached[i]
+        else:
+            cp = int(getattr(self.pending[i], "cached_prefix", 0) or 0)
+        return min(max(cp, 0), self.pending_context_len(i) - 1)
+
+    def pending_prefill_len(self, i: int) -> int:
+        """Tokens the prefill of ``pending[i]`` would actually compute:
+        context minus the cached prefix."""
+        return self.pending_context_len(i) - self.pending_cached_len(i)
 
     def blocks_for(self, tokens: int) -> int:
         """KV blocks covering ``tokens`` (0 on unpaged executors),
@@ -117,8 +141,10 @@ class SchedulerView:
         return min(n, self.pages_per_slot) if self.pages_per_slot else n
 
     def pending_blocks(self, i: int) -> int:
-        """Blocks ``pending[i]`` needs if admitted now: its prefill
-        context plus its (predicted) output budget."""
+        """*Unique new* blocks ``pending[i]`` needs if admitted now: its
+        prefill context plus its (predicted) output budget, minus the
+        blocks its cached prefix already aliases — shared pages cost the
+        pool nothing, so memory admission must not charge for them."""
         r = self.pending[i]
         try:
             out = int(r.planning_output_len())
@@ -126,7 +152,10 @@ class SchedulerView:
             out = 0
         gen = self.pending_generated[i] \
             if i < len(self.pending_generated) else 0
-        return self.blocks_for(r.input_len + max(out, gen + 1))
+        need = self.blocks_for(r.input_len + max(out, gen + 1))
+        if self.block_size > 0:
+            need -= self.pending_cached_len(i) // self.block_size
+        return max(need, 0)
 
 
 @dataclasses.dataclass
@@ -350,10 +379,13 @@ class SLOPreemptPolicy(SchedulingPolicy):
             cands.append(r.slo.e2e - waited)
         return min(cands) if cands else math.inf
 
-    def _prefill_cost(self, view: SchedulerView, ctx: int) -> float:
+    def _prefill_cost(self, view: SchedulerView, ctx: int,
+                      cached: int = 0) -> float:
         """Time from admission to first token under the view's
         discipline: whole-prompt prefill, or — chunked — the chunk sum
-        plus the decode rounds for the running batch between chunks."""
+        plus the decode rounds for the running batch between chunks.
+        ``cached`` tokens (an aliased prefix) are skipped entirely."""
+        ctx = ctx - min(max(cached, 0), ctx - 1)
         C = getattr(view.discipline, "chunk_size", 0)
         if C <= 0:
             return self.model.prefill_time(1, ctx)
@@ -373,7 +405,7 @@ class SLOPreemptPolicy(SchedulingPolicy):
         r = view.pending[i]
         waited = max(0.0, view.now - submit_base(r))
         ctx = view.pending_context_len(i)
-        prefill = self._prefill_cost(view, ctx)
+        prefill = self._prefill_cost(view, ctx, view.pending_cached_len(i))
         out = []
         if r.slo.ttft is not None and ctx == r.input_len:
             out.append((r.slo.ttft - waited, prefill))
@@ -473,8 +505,11 @@ class SLOPreemptPolicy(SchedulingPolicy):
             while vj < len(victims):
                 j = victims[vj]
                 v = view.active[j]
+                # a victim's cached prefix survives its eviction (the
+                # index owns those pages), so its re-prefill skips it too
                 recompute = self._prefill_cost(
-                    view, v.request.input_len + v.generated)
+                    view, v.request.input_len + v.generated,
+                    int(getattr(v.request, "cached_prefix", 0) or 0))
                 if not (v.slack > recompute + urgent_service + self.margin):
                     break                   # victims can't absorb THIS
                 picked.append(j)            # arrival; try the next one

@@ -42,6 +42,12 @@ class Request:
     # time is never computed across two different clocks
     submit_time: Optional[float] = None
     prompt: Optional[object] = None   # raw payload for engine-backed runs
+    # prompt tokens whose KV is already cached (shared-prefix reuse):
+    # prefill computes only input_len - cached_prefix tokens, while
+    # decode still attends the full context — every pricing layer
+    # (objective, latency model, policies, event core) discounts prefill
+    # by this, so cached-prefix requests rank by their true cost
+    cached_prefix: int = 0
 
     @property
     def h(self) -> int:
@@ -83,4 +89,9 @@ def as_arrays(requests) -> dict:
                               for r in requests], np.float64),
         "slo_tpot": np.array([r.slo.tpot if r.slo.tpot is not None else big
                               for r in requests], np.float64),
+        # clipped below input_len: at least one prompt token is always
+        # computed (prefill must produce true last-token logits)
+        "cached_prefix": np.array(
+            [min(max(int(getattr(r, "cached_prefix", 0) or 0), 0),
+                 r.input_len - 1) for r in requests], np.float64),
     }

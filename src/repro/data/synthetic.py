@@ -79,3 +79,97 @@ def token_stream(n_tokens: int, vocab: int, seed: int = 0,
     """Synthetic token ids for engine/training runs."""
     rng = np.random.default_rng(seed)
     return rng.integers(0, vocab, size=(batch, n_tokens), dtype=np.int32)
+
+
+# --------------------------------------------------------------- multi-turn
+def sample_multiturn_requests(n_conversations: int, turns: int = 3,
+                              seed: int = 0,
+                              profile: Optional[TaskProfile] = None,
+                              system_prompt_len: int = 128,
+                              think_time: float = 2.0,
+                              block_size: int = 16) -> List[Request]:
+    """Request-level multi-turn chat workload (simulator/planner input).
+
+    Each conversation opens with a shared system prompt and grows turn
+    over turn: turn ``k``'s prompt is the full prior context (system
+    prompt + earlier prompts and replies) plus fresh user tokens, so its
+    ``cached_prefix`` — the block-aligned span a prefix-caching server
+    already holds — covers everything but the new tail.  Turn 0 of every
+    conversation after the first reuses the system prompt itself.
+    Arrivals are spaced by exponential user think time; requests come
+    back sorted by arrival with contiguous ids.
+    """
+    prof = profile or CHAT_TASK
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for c in range(n_conversations):
+        ctx = system_prompt_len          # tokens already in the convo
+        t = float(rng.exponential(think_time))
+        for k in range(turns):
+            li_new = int(np.clip(rng.lognormal(prof.in_mu, prof.in_sigma),
+                                 8, prof.max_len))
+            lo = int(np.clip(rng.lognormal(prof.out_mu, prof.out_sigma),
+                             4, prof.max_len))
+            input_len = min(ctx + li_new, prof.max_len)
+            if k > 0 or c > 0:
+                # prior context (or the shared system prompt) is cached
+                # at block granularity
+                cached = (min(ctx, input_len - 1)
+                          // block_size) * block_size
+            else:
+                cached = 0
+            reqs.append(Request(req_id=0, task_type=prof.name,
+                                input_len=input_len, output_len=lo,
+                                slo=prof.slo, arrival_time=t,
+                                cached_prefix=cached))
+            ctx = input_len + lo
+            t += float(rng.exponential(think_time))
+    reqs.sort(key=lambda r: r.arrival_time)
+    for i, r in enumerate(reqs):
+        r.req_id = i
+    return reqs
+
+
+def sample_multiturn_token_requests(
+        n_conversations: int, turns: int = 3, vocab: int = 97,
+        seed: int = 0, system_prompt_len: int = 48,
+        n_system_prompts: int = 2, user_len=(8, 24), reply_len: int = 8,
+        max_new_tokens: int = 8, think_time: float = 0.05,
+        profile: Optional[TaskProfile] = None):
+    """Token-level multi-turn workload for engine-backed runs.
+
+    Returns ``[(Request, prompt_tokens)]`` sorted by arrival.  Turn
+    ``k``'s prompt is turn ``k-1``'s prompt followed by a synthetic
+    assistant reply and fresh user tokens, and every conversation opens
+    with one of ``n_system_prompts`` *shared* system prompts — so a
+    prefix-caching engine serves the repeated span from cached pages.
+    ``cached_prefix`` is left 0: the engine's radix index discovers the
+    true cached span itself (the actual reply tokens it generated, not
+    the synthetic stand-ins, decide what re-matches).
+    """
+    prof = profile or CHAT_TASK
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, vocab, system_prompt_len,
+                                dtype=np.int32)
+                   for _ in range(max(n_system_prompts, 1))]
+    out = []
+    for c in range(n_conversations):
+        ctx = sys_prompts[c % len(sys_prompts)]
+        t = float(rng.exponential(think_time))
+        for k in range(turns):
+            u = rng.integers(0, vocab,
+                             int(rng.integers(user_len[0], user_len[1])),
+                             dtype=np.int32)
+            prompt = np.concatenate([ctx, u]).astype(np.int32)
+            req = Request(req_id=0, task_type=prof.name,
+                          input_len=len(prompt),
+                          output_len=max_new_tokens, slo=prof.slo,
+                          arrival_time=t)
+            out.append((req, prompt))
+            reply = rng.integers(0, vocab, reply_len, dtype=np.int32)
+            ctx = np.concatenate([prompt, reply])
+            t += float(rng.exponential(think_time))
+    out.sort(key=lambda p: p[0].arrival_time)
+    for i, (r, _) in enumerate(out):
+        r.req_id = i
+    return out

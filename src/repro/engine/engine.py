@@ -53,9 +53,11 @@ from repro.core.policies import (ChunkedPrefill, ExecutionDiscipline,
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import meets_slo
 from repro.engine.blocks import BlockPool
+from repro.engine.prefix import RadixPrefixIndex
 from repro.engine.request import Phase, RuntimeRequest
 from repro.engine.sampling import sample
-from repro.models.cache import init_cache, init_paged_cache, paged_slot_len
+from repro.models.cache import (copy_page, init_cache, init_paged_cache,
+                                paged_slot_len)
 from repro.models.config import ModelConfig
 from repro.models.model import (forward_chunk, forward_chunk_paged,
                                 forward_decode, forward_decode_paged,
@@ -75,7 +77,8 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  profiler: Optional[LatencyProfiler] = None,
                  chunked_prefill: int = 0, paged: Optional[bool] = None,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         """chunked_prefill > 0: split prompts into chunks of that size and
         interleave each chunk with a decode round for the running slots
         (Sarathi-style — new prompts no longer stall running decodes for
@@ -87,7 +90,16 @@ class Engine:
         to the dense layout's capacity of ``max_slots`` full-length
         slots.  Shrinking ``num_blocks`` trades HBM for admission
         capacity — admission refuses requests whose prompt + output
-        budget exceeds the free blocks."""
+        budget exceeds the free blocks.
+
+        ``prefix_cache`` (default on for paged pure-attention archs)
+        enables shared-prefix KV reuse: finished/prefilled prompts are
+        indexed block-by-block in a radix trie, arriving prompts alias
+        the longest cached block-aligned prefix (refcounted pages) and
+        prefill only the unique suffix.  Divergent writes into a shared
+        page copy-on-write.  Disabled automatically for SSM/hybrid
+        (recurrent state is not block-addressable), MLA and
+        sliding-window archs."""
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -122,8 +134,15 @@ class Engine:
                                        donate_argnums=(1,))
             self._chunk_fn = jax.jit(self._prefill_chunk_paged,
                                      donate_argnums=(1,))
+            # prefix sharing needs position-faithful, block-addressable
+            # KV: pure full-attention archs only
+            self.prefix = RadixPrefixIndex(self.pool, block_size) \
+                if (prefix_cache and not cfg.ssm_layers
+                    and cfg.mla is None and not cfg.sliding_window) \
+                else None
         else:
             self.pool = None
+            self.prefix = None
             # slot pool: one batched dense cache over all slots
             self.cache = init_cache(cfg, max_slots, max_seq_len)
             self._decode_fn = jax.jit(self._decode_step)
@@ -131,6 +150,7 @@ class Engine:
             self._chunk_fn = jax.jit(self._prefill_chunk)
         self.chunked_prefill = 0 if cfg.mla is not None else chunked_prefill
         self._warm = set()
+        self.cow_copies = 0          # copy-on-write page splits performed
 
     # ------------------------------------------------------------ jitted
     def _decode_step(self, params, cache, tokens, active):
@@ -185,10 +205,13 @@ class Engine:
                                      cache=new_cache_arg(cache), slot=slot,
                                      length=length)
 
-    def _prefill_chunk_paged(self, params, cache, tokens, slot):
-        """One chunk continuation for ``slot`` against the paged pool."""
+    def _prefill_chunk_paged(self, params, cache, tokens, slot, length):
+        """One chunk continuation for ``slot`` against the paged pool.
+        ``length`` (traced) marks the valid rows of a padded chunk —
+        padded rows route to the null page and are causally masked."""
         return forward_chunk_paged(params, self.cfg, tokens=tokens,
-                                   cache=new_cache_arg(cache), slot=slot)
+                                   cache=new_cache_arg(cache), slot=slot,
+                                   length=length)
 
     def _warm_paged(self, fn, *args):
         """Compile-warm a donated-cache jitted fn without perturbing
@@ -205,8 +228,79 @@ class Engine:
         tokens = min(rt.input_len + rt.max_new_tokens, self.slot_len)
         return -(-tokens // self.block_size)
 
+    def _prefix_eligible(self, rt: RuntimeRequest) -> bool:
+        """Prefix sharing is safe only while the slot ring never wraps:
+        a wrap would overwrite aliased pages in place."""
+        return (self.prefix is not None
+                and rt.input_len + rt.max_new_tokens <= self.slot_len)
+
+    def _probe_cached(self, rt: RuntimeRequest) -> int:
+        """Read-only longest-cached-prefix length (tokens) for pricing."""
+        if not self._prefix_eligible(rt):
+            return 0
+        ctx = self._context_tokens(rt)
+        return self.prefix.probe(ctx, max_tokens=len(ctx) - 1)
+
+    def _unique_blocks_needed(self, rt: RuntimeRequest) -> int:
+        """Blocks the request needs *beyond* the cached prefix it would
+        alias — what admission must actually find in the free list."""
+        return self._blocks_needed(rt) \
+            - self._probe_cached(rt) // self.block_size
+
+    def _admission_blocks(self) -> int:
+        """Blocks admission can draw on: the free list plus cached pages
+        only the prefix index holds (evictable on demand)."""
+        extra = self.prefix.reclaimable() if self.prefix is not None else 0
+        return self.pool.available + extra
+
+    def _reserve_blocks(self, rt: RuntimeRequest) -> bool:
+        """Atomically reserve the request's block footprint: alias the
+        longest cached block-aligned prefix (sharing those pages), evict
+        index-only pages if the free list is short, and allocate the
+        rest.  The reservation lands in ``rt.block_ids`` /
+        ``rt.cached_tokens`` and is consumed by the next prefill.
+        Returns False (no state change) when blocks don't cover it."""
+        if rt.block_ids is not None:
+            return True                      # already reserved this step
+        need = self._blocks_needed(rt)
+        matched: List[int] = []
+        if self._prefix_eligible(rt):
+            ctx = self._context_tokens(rt)
+            # cap at len-1: the request always writes at least one new
+            # token position, so a full-context hit must still leave the
+            # final block's frontier in a page this request owns
+            matched = self.prefix.match(ctx, max_tokens=len(ctx) - 1)
+            self.pool.share(matched)         # pin before any eviction
+        n_new = need - len(matched)
+        short = n_new - self.pool.available
+        if short > 0 and self.prefix is not None:
+            self.prefix.evict(short)
+        if n_new > self.pool.available:
+            self.pool.release(matched)       # roll back the pin
+            return False
+        rt.block_ids = matched + self.pool.alloc(n_new)
+        rt.cached_tokens = len(matched) * self.block_size
+        return True
+
     def _assign_blocks(self, rt: RuntimeRequest, slot: int):
-        ids = self.pool.alloc(self._blocks_needed(rt))
+        # upgrade an admission-time reservation: prefills earlier in the
+        # same step may have indexed this prompt's prefix since — a
+        # re-reservation shares more and allocates strictly less, so it
+        # can never fail where the original succeeded
+        if rt.block_ids is not None and self._prefix_eligible(rt):
+            ctx = self._context_tokens(rt)
+            if self.prefix.probe(ctx, max_tokens=len(ctx) - 1) \
+                    > rt.cached_tokens:
+                self.pool.release(rt.block_ids)
+                rt.block_ids = None
+                rt.cached_tokens = 0
+        if not self._reserve_blocks(rt):
+            raise RuntimeError(
+                f"out of KV blocks: request {rt.req_id} needs "
+                f"{self._unique_blocks_needed(rt)} new blocks, "
+                f"{self.pool.available} free")
+        ids = rt.block_ids
+        rt.block_ids = None                  # reservation consumed
         self._slot_blocks[slot] = ids
         row = np.zeros(self.pages_per_slot, np.int32)
         row[:len(ids)] = ids
@@ -215,10 +309,53 @@ class Engine:
 
     def _release_blocks(self, slot: int):
         if self.paged and self._slot_blocks[slot]:
-            self.pool.free(self._slot_blocks[slot])
+            self.pool.release(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
             self.cache["block_tables"] = \
                 self.cache["block_tables"].at[slot].set(0)
+
+    def _index_span(self, rt: RuntimeRequest, n_tokens: int):
+        """Publish the slot's first ``n_tokens`` KV positions to the
+        prefix index (full blocks only; the index takes its own ref on
+        each newly indexed page, so they outlive this request)."""
+        if rt.slot < 0 or not self._prefix_eligible(rt):
+            return
+        ctx = self._context_tokens(rt)
+        self.prefix.insert(ctx[:n_tokens], self._slot_blocks[rt.slot],
+                           max_tokens=n_tokens)
+
+    def _cow_block(self, slot: int, bi: int) -> int:
+        """Give ``slot`` a private copy of its ``bi``-th page (copy-on-
+        write) if other owners share it.  Returns the (possibly new)
+        page id."""
+        old = self._slot_blocks[slot][bi]
+        if self.pool.refcount(old) <= 1:
+            return old
+        if not self.pool.available and self.prefix is not None:
+            self.prefix.evict(1)
+        new = self.pool.alloc(1)[0]
+        self.cache = copy_page(self.cache, old, new)
+        self._slot_blocks[slot][bi] = new
+        self.cache["block_tables"] = \
+            self.cache["block_tables"].at[slot, bi].set(new)
+        self.pool.release([old])
+        self.cow_copies += 1
+        return new
+
+    def _cow_guard(self):
+        """Before a decode round writes, split any shared page a slot's
+        write frontier sits in.  Block-aligned matching (capped below
+        the full context) makes this structurally unreachable through
+        normal admission — kept as defense in depth so a shared page
+        can never be scribbled on."""
+        for slot, rt in enumerate(self.slot_req):
+            if rt is None:
+                continue
+            pos = rt.input_len + len(rt.generated) - 1
+            bi = (pos % self.slot_len) // self.block_size
+            blocks = self._slot_blocks[slot]
+            if bi < len(blocks) and self.pool.refcount(blocks[bi]) > 1:
+                self._cow_block(slot, bi)
 
     # ------------------------------------------------------------ slots
     def _write_slot(self, slot: int, cache1):
@@ -252,31 +389,36 @@ class Engine:
         n = len(ctx)
         if n >= self.max_seq_len:
             raise ValueError(f"prefill context {n} >= max_seq_len")
+        cached = 0
         if self.paged:
             self._assign_blocks(rt, slot)
-            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+            cached = rt.cached_tokens
+            # aliased prefix pages are already populated: start the
+            # chunk walk mid-sequence, skipping the cached span
+            self.cache["pos"] = self.cache["pos"].at[slot].set(cached)
             cache1 = None
         else:
             from repro.models.cache import init_cache as _ic
             cache1 = _ic(self.cfg, 1, self.max_seq_len)
         logits = None
-        i = 0
+        i = cached
         while i < n:
             chunk = ctx[i: i + C]
             toks = jnp.asarray(np.asarray(chunk, np.int32)[None])
+            m = len(chunk)
             # warm the jit cache per chunk size so first-seen compile
             # time never pollutes the engine clock / profiler samples
-            if ("chunk", len(chunk)) not in self._warm:
+            if ("chunk", m) not in self._warm:
                 if self.paged:
-                    self._warm_paged(self._chunk_fn, toks, slot)
+                    self._warm_paged(self._chunk_fn, toks, slot, m)
                 else:
                     self._chunk_fn(self.params, cache1,
                                    toks)[0].block_until_ready()
-                self._warm.add(("chunk", len(chunk)))
+                self._warm.add(("chunk", m))
             t0 = time.perf_counter()
             if self.paged:
                 logits, self.cache = self._chunk_fn(self.params, self.cache,
-                                                    toks, slot)
+                                                    toks, slot, m)
             else:
                 logits, cache1 = self._chunk_fn(self.params, cache1, toks)
             logits.block_until_ready()
@@ -285,8 +427,8 @@ class Engine:
             if self.profiler is not None:
                 # chunk continuations are prefill work: feed them to the
                 # latency-model fit like whole-prompt prefills
-                self.profiler.observe_prefill(1, len(chunk), dt)
-            i += len(chunk)
+                self.profiler.observe_prefill(1, m, dt)
+            i += m
             if i < n:
                 self.decode_round()     # running slots keep decoding
         if not self.paged:
@@ -295,6 +437,7 @@ class Engine:
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
         rt.slot = slot
+        self._index_span(rt, n)
         if rt.ttft_time is None:            # preserved across preemptions
             rt.ttft_time = self.clock
         self.key, sk = jax.random.split(self.key)
@@ -311,11 +454,17 @@ class Engine:
         # SSM/hybrid states are sequence-order sensitive: pad tokens after
         # the prompt would pollute the recurrent state, so those archs
         # prefill at exact length (one compile per distinct length).
+        if self.paged:
+            self._assign_blocks(rt, slot)
+            if rt.cached_tokens:
+                # aliased prefix pages hold positions [0, cached): only
+                # the unique suffix is computed (zero prefill FLOPs for
+                # the shared span)
+                return self._prefill_suffix(rt, slot, ctx,
+                                            rt.cached_tokens)
         L = n if self.cfg.ssm_layers else _bucket(n)
         toks = np.zeros((1, L), np.int32)
         toks[0, :n] = ctx
-        if self.paged:
-            self._assign_blocks(rt, slot)
         # warm the jit cache for this bucket so compile time never
         # pollutes the engine clock / profiler samples
         if ("prefill", L) not in self._warm:
@@ -344,10 +493,48 @@ class Engine:
         self.slot_req[slot] = rt
         rt.phase = Phase.RUNNING
         rt.slot = slot
+        self._index_span(rt, n)
         if rt.ttft_time is None:            # preserved across preemptions
             rt.ttft_time = self.clock
         self.key, sk = jax.random.split(self.key)
         tok = int(sample(logits[None, :], sk, self.temperature)[0])
+        self._push_token(rt, tok)
+
+    def _prefill_suffix(self, rt: RuntimeRequest, slot: int,
+                        ctx: np.ndarray, cached: int):
+        """Prefill only the unique suffix ``ctx[cached:]`` of a prompt
+        whose first ``cached`` positions alias index pages: the slot's
+        ``pos`` is preset to ``cached`` and one padded chunk call runs
+        mid-sequence (padded rows route to the null page and are
+        causally masked)."""
+        n = len(ctx)
+        m = n - cached
+        L = _bucket(m)
+        toks = np.zeros((1, L), np.int32)
+        toks[0, :m] = ctx[cached:]
+        toks = jnp.asarray(toks)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(cached)
+        if ("chunk", L) not in self._warm:
+            self._warm_paged(self._chunk_fn, toks, slot, m)
+            self._warm.add(("chunk", L))
+        t0 = time.perf_counter()
+        logits, self.cache = self._chunk_fn(self.params, self.cache,
+                                            toks, slot, m)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        if self.profiler is not None:
+            # only the computed suffix is prefill work
+            self.profiler.observe_prefill(1, m, dt)
+        self.slot_free[slot] = False
+        self.slot_req[slot] = rt
+        rt.phase = Phase.RUNNING
+        rt.slot = slot
+        self._index_span(rt, n)
+        if rt.ttft_time is None:            # preserved across preemptions
+            rt.ttft_time = self.clock
+        self.key, sk = jax.random.split(self.key)
+        tok = int(sample(logits[:, 0], sk, self.temperature)[0])
         self._push_token(rt, tok)
 
     def preempt(self, rt: RuntimeRequest):
@@ -371,6 +558,11 @@ class Engine:
                 len(rt.generated) >= rt.max_new_tokens:
             rt.phase = Phase.FINISHED
             rt.finish_time = self.clock
+            # publish the full conversation's KV span (prompt + all but
+            # the never-written final sampled token) before releasing —
+            # the index's refs keep these pages alive for follow-up
+            # turns that extend this conversation
+            self._index_span(rt, rt.input_len + len(rt.generated) - 1)
             self._release_blocks(rt.slot)
             self.slot_free[rt.slot] = True
             self.slot_req[rt.slot] = None
@@ -380,6 +572,8 @@ class Engine:
         active_np = np.array([not f for f in self.slot_free])
         if not active_np.any():
             return
+        if self.paged:
+            self._cow_guard()
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i, rt in enumerate(self.slot_req):
             if rt is not None:
@@ -494,15 +688,23 @@ class Engine:
                         rt.max_new_tokens - len(rt.generated),
                         rt.input_len + len(rt.generated), self.clock,
                         rt.ttft_time, rt.submit_time, b, model,
-                        blocks_held=(len(self._slot_blocks[rt.slot])
-                                     if self.paged else 0))
+                        # only pages this request exclusively owns are
+                        # freeable by preempting it — shared/indexed
+                        # pages survive its eviction
+                        blocks_held=(sum(
+                            1 for bl in self._slot_blocks[rt.slot]
+                            if self.pool.refcount(bl) == 1)
+                            if self.paged else 0))
                         for rt in active_rts),
                     now=self.clock, free=len(free),
                     max_batch=self.max_slots,
                     pending_generated=tuple(len(rt.generated)
                                             for rt in waiting),
+                    pending_cached=(tuple(self._probe_cached(rt)
+                                          for rt in waiting)
+                                    if self.paged else ()),
                     discipline=disc,
-                    free_blocks=(self.pool.available if self.paged
+                    free_blocks=(self._admission_blocks() if self.paged
                                  else None),
                     total_blocks=(self.pool.total if self.paged else None),
                     block_size=(self.block_size if self.paged else 0),
@@ -520,15 +722,14 @@ class Engine:
                     admitted = True
                 free = self.free_slots()
                 sel = []
-                avail = self.pool.available if self.paged else None
                 for j in admit:
                     if len(sel) >= len(free):
                         break
-                    if avail is not None:
-                        need = self._blocks_needed(waiting[j])
-                        if need > avail:
-                            continue    # out of KV blocks: keep waiting
-                        avail -= need
+                    # reserve atomically (alias cached prefix + alloc the
+                    # unique rest) so same-step admissions never race a
+                    # probe against a later allocation
+                    if self.paged and not self._reserve_blocks(waiting[j]):
+                        continue        # out of KV blocks: keep waiting
                     sel.append(j)
                 chosen = [waiting[j] for j in sel]
                 for j in sorted(sel, reverse=True):
@@ -545,14 +746,16 @@ class Engine:
                                      t0 + future[fi].request.arrival_time)
                 elif waiting:
                     if self.paged and all(
-                            self._blocks_needed(rt) > self.pool.available
+                            self._unique_blocks_needed(rt)
+                            > self._admission_blocks()
                             for rt in waiting):
                         rt = waiting[0]
                         raise ValueError(
                             f"request {rt.req_id} needs "
-                            f"{self._blocks_needed(rt)} KV blocks but only "
-                            f"{self.pool.available} exist: prompt + output "
-                            "budget exceeds the block pool")
+                            f"{self._unique_blocks_needed(rt)} KV blocks "
+                            f"but only {self._admission_blocks()} exist: "
+                            "prompt + output budget exceeds the block "
+                            "pool")
                     raise RuntimeError("admission stalled: policy admitted "
                                        "nothing while the engine was idle")
         return self._collect(rts)
@@ -585,8 +788,18 @@ class Engine:
                 "tokens": list(rt.generated),
                 "met": meets_slo(rt.request, e2e, ttft, tpot),
                 "preemptions": rt.preemptions,
+                "cached": rt.cached_tokens,
             }
         return out
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Prefix-cache counters for benchmarks/diagnostics."""
+        if self.prefix is None:
+            return {"hit_rate": 0.0, "cached_blocks": 0, "cow_copies": 0,
+                    "enabled": False}
+        return {"hit_rate": self.prefix.hit_rate,
+                "cached_blocks": len(self.prefix),
+                "cow_copies": self.cow_copies, "enabled": True}
 
 
 def new_cache_arg(cache):

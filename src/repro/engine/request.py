@@ -29,6 +29,12 @@ class RuntimeRequest:
     ttft_time: Optional[float] = None
     finish_time: Optional[float] = None
     preemptions: int = 0                 # times evicted (KV recomputed)
+    # prompt tokens served from the prefix cache at the last prefill
+    # (aliased pages — skipped, not computed); 0 without a prefix hit
+    cached_tokens: int = 0
+    # block reservation made at admission, consumed by the next prefill
+    # (engine-internal; None outside the admit -> prefill window)
+    block_ids: Optional[List[int]] = None
 
     @property
     def req_id(self) -> int:

@@ -507,17 +507,22 @@ def gqa_decode_paged(params, cfg, x, positions, layer_cache, block_tables,
 
 
 def gqa_continue_paged(params, cfg, x, positions, layer_cache, block_tables,
-                       start_pos):
+                       start_pos, n=None):
     """Chunked-prefill continuation on the paged pool (single slot).
 
     x: [B, C, D] (B = 1 slot); the prefix is gathered through the block
     table (dequantized for int8 caches), the chunk is scattered into its
     pages afterwards (O(C); quantized with fresh per-token scales).
-    Returns (out [B,C,D], new layer dict).
+    ``n`` (static or traced; default C) is the number of *valid* chunk
+    rows — padded suffix-prefill buckets write only their valid span,
+    while padded keys beyond it stay causally masked out of every valid
+    query anyway.  Returns (out [B,C,D], new layer dict).
     """
     from repro.models.cache import (dequantize_kv, gather_pages,
                                     paged_prefill_write, quantize_kv)
     c = x.shape[1]
+    if n is None:
+        n = c
     quant = "k_scale" in layer_cache
     k_prefix = gather_pages(layer_cache["k"], block_tables)
     v_prefix = gather_pages(layer_cache["v"], block_tables)
@@ -533,7 +538,7 @@ def gqa_continue_paged(params, cfg, x, positions, layer_cache, block_tables,
     bt = block_tables[0]
 
     def write(pages, vals):
-        return paged_prefill_write(pages, vals[0], bt, c, start=start_pos)
+        return paged_prefill_write(pages, vals[0], bt, n, start=start_pos)
     if quant:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)

@@ -254,6 +254,20 @@ def write_prefill_paged(cache, layer_idx: int, kv_tuple, cfg: ModelConfig,
     return cache
 
 
+def copy_page(cache, src: int, dst: int):
+    """Copy one KV page across every paged layer: the device half of
+    copy-on-write.  A writer about to touch a block other owners still
+    share gets a private copy at ``dst`` first (host side: fresh alloc +
+    block-table patch in the engine).  Per-slot state (SSM) is untouched
+    — it is never shared."""
+    for i, layer in enumerate(cache["layers"]):
+        if "conv" in layer:
+            continue
+        cache["layers"][i] = {k: v.at[dst].set(v[src])
+                              for k, v in layer.items()}
+    return cache
+
+
 def gather_pages(pages, block_tables):
     """Materialize the logical [B, L, ...] view of a paged layer.
 

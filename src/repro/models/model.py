@@ -343,18 +343,31 @@ def forward_prefill_paged(params, cfg: ModelConfig, *, tokens=None,
 
 
 def forward_chunk_paged(params, cfg: ModelConfig, *, tokens=None,
-                        embeds=None, cache=None, slot=0,
+                        embeds=None, cache=None, slot=0, length=None,
                         ctx: Optional[ShardingCtx] = None):
     """Chunked-prefill step for ONE slot against the paged pool
     (Sarathi-style).  The chunk attends to the slot's gathered prefix
     pages plus itself, then is scattered into its pages in place.
 
-    tokens: [1, C].  Returns (chunk-final logits [1,1,V], new_cache).
+    The chunk starts at ``cache["pos"][slot]`` — which need not be 0:
+    a request aliasing a cached prefix (shared-prefix KV reuse) presets
+    ``pos`` to the cached length and prefills only its unique suffix
+    through this path.
+
+    tokens: [1, C]; ``length`` (static or traced; default C) is the
+    number of valid rows — padded power-of-two suffix buckets reuse one
+    compilation per bucket.  Padded rows are never written to pages and
+    never attended by valid queries; ``length < C`` is only meaningful
+    for attention-only archs (SSM state consumes all C rows in order).
+    Returns (valid-final logits [1,1,V], new_cache).
     """
     assert cache is not None
     assert cfg.mla is None, "chunked prefill: MLA not supported"
     x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
     b, c = x.shape[0], x.shape[1]
+    if length is None:
+        length = c
+    length = jnp.asarray(length, jnp.int32)
     pos0 = cache["pos"][slot]
     bt = jax.lax.dynamic_slice_in_dim(cache["block_tables"], slot, 1)
     positions = pos0 + jnp.arange(c, dtype=jnp.int32)[None, :]
@@ -379,7 +392,8 @@ def forward_chunk_paged(params, cfg: ModelConfig, *, tokens=None,
         else:
             xin = apply_norm(x, block["attn_norm"], cfg)
             h, new_lc = attn.gqa_continue_paged(
-                block["attn"], cfg, xin, positions, layer_cache, bt, pos0)
+                block["attn"], cfg, xin, positions, layer_cache, bt, pos0,
+                n=length)
             x = x + h
             y = apply_norm(x, block["mlp_norm"], cfg)
             if "moe" in block:
@@ -389,8 +403,9 @@ def forward_chunk_paged(params, cfg: ModelConfig, *, tokens=None,
             x = x + y
             cache["layers"][i] = new_lc
     x = apply_norm(x, params["final_norm"], cfg)
-    logits = lm_head(params, cfg, x[:, -1:])
-    cache["pos"] = cache["pos"].at[slot].add(c)
+    x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = lm_head(params, cfg, x)
+    cache["pos"] = cache["pos"].at[slot].add(length)
     return logits, cache
 
 

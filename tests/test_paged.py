@@ -251,8 +251,12 @@ def test_block_pool_invariants():
 def test_engine_blocks_across_admit_preempt_readmit_finish(params):
     """Alloc/free invariants over the full lifecycle: blocks are held
     exactly while a request holds a slot, re-admission re-allocates, and
-    the pool drains back to full after every request finishes."""
-    eng = Engine(CFG, params, max_slots=2, max_seq_len=128)
+    the pool drains back to full after every request finishes.  Runs
+    with the prefix cache off: exclusive PR-5 ownership semantics (with
+    prefix sharing, the index deliberately retains pages — covered in
+    test_prefix.py)."""
+    eng = Engine(CFG, params, max_slots=2, max_seq_len=128,
+                 prefix_cache=False)
     total = eng.pool.total
     rt = _rts(1, seed=6)[0]
     eng.prefill(rt, 0)
@@ -276,7 +280,8 @@ def test_engine_out_of_blocks_admission_refusal(params):
     rts = _rts(2, seed=7, lo=30, hi=36, max_new=4)
     need = -(-(36 + 4) // 16)
     eng = Engine(CFG, params, max_slots=2, max_seq_len=128,
-                 num_blocks=need + 1)       # + null page: fits ONE request
+                 num_blocks=need + 1,       # + null page: fits ONE request
+                 prefix_cache=False)        # exclusive-pool drain semantics
     out = eng.run_fcfs(rts)
     assert all(len(v["tokens"]) == 4 for v in out.values())
     # sequential service: 1 could only start after 0 finished
