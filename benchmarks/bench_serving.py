@@ -1,0 +1,150 @@
+"""Streaming serving-loop benchmark: wall-clock SLO attainment under
+Poisson load, and the overlapped-dispatch win.
+
+Two row families (also written to ``experiments/bench/BENCH_serving.json``
+for the perf trajectory):
+
+* ``serve_overlap_vs_sync`` — identical trace through the
+  :class:`~repro.serving.ServeLoop` with overlapped one-step-lookahead
+  dispatch vs the synchronous reference mode.  At temperature 0 the two
+  runs must produce *identical token ids* (parity is asserted and
+  recorded); the acceptance metric is measured mean time-between-tokens
+  at equal token output — overlap hides host scheduling, stream
+  delivery, and block accounting behind device compute.
+* ``serve_rate{r}_{policy}`` — streamed Poisson load at several arrival
+  rates under ≥ 2 policies (``fcfs`` and ``slo-reanneal``), reporting
+  *measured* wall-clock attainment/goodput/TTFT/TBT from the token
+  streams — the regime the paper's SLOs are defined in, as opposed to
+  the modelled/engine-clock rows of ``bench_online``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.data.synthetic import sample_serve_workload
+
+
+def _make_engine(max_slots=4):
+    import jax
+
+    from repro.engine.engine import Engine
+    from repro.models import ModelConfig, init_params
+
+    cfg = ModelConfig(name="bench-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return Engine(cfg, params, max_slots=max_slots, max_seq_len=128), cfg
+
+
+def _serve(pairs, policy, overlap, model=None, max_slots=4):
+    from repro.serving import ServeLoop
+    eng, _ = _make_engine(max_slots)
+    loop = ServeLoop(eng, policy, model=model, overlap=overlap)
+    loop.start(warm_lengths=[len(p) for _, p in pairs])
+    streams = loop.submit_trace([(r, p) for r, p in pairs])
+    loop.serve()
+    return loop, streams
+
+
+def _trace(n, seed, rate, scale=1.0):
+    """Fresh Request objects each run (the loop stamps them)."""
+    return sample_serve_workload(n, 128, seed=seed, scale=scale,
+                                 arrival_rate=rate, in_range=(8, 48),
+                                 out_range=(4, 16))
+
+
+def _overlap_rows(quick: bool):
+    """Overlap vs sync on one trace: token parity + measured mean TBT."""
+    n = 8 if quick else 16
+    runs = {}
+    for mode in ("sync", "overlap"):
+        loop, streams = _serve(_trace(n, seed=5, rate=60.0), "fcfs",
+                               overlap=(mode == "overlap"))
+        s = loop.metrics.summary()
+        runs[mode] = (s, [st.tokens for st in streams])
+    parity = runs["sync"][1] == runs["overlap"][1]
+    tok_sync = runs["sync"][0]["tokens"]
+    tok_over = runs["overlap"][0]["tokens"]
+    tbt_sync = runs["sync"][0]["tbt_mean"]
+    tbt_over = runs["overlap"][0]["tbt_mean"]
+    speedup = tbt_sync / tbt_over if tbt_over > 0 else 0.0
+    payload = {
+        "n_requests": n,
+        "token_parity": bool(parity),
+        "tokens_sync": tok_sync, "tokens_overlap": tok_over,
+        "tbt_mean_sync": tbt_sync, "tbt_mean_overlap": tbt_over,
+        "tbt_p90_sync": runs["sync"][0]["tbt_p90"],
+        "tbt_p90_overlap": runs["overlap"][0]["tbt_p90"],
+        "tbt_speedup": speedup,
+        "overlap_frac": runs["overlap"][0].get("overlap_frac", 0.0),
+    }
+    assert parity, "overlap vs sync token ids diverged"
+    assert tok_sync == tok_over, "token output not equal across modes"
+    row = [["serve_overlap_vs_sync", round(tbt_over * 1e6, 2),
+            f"parity={int(parity)};tok={tok_over};"
+            f"tbt_sync={tbt_sync * 1e3:.3f}ms;"
+            f"tbt_overlap={tbt_over * 1e3:.3f}ms;"
+            f"speedup={speedup:.3f}x;"
+            f"overlap_frac={payload['overlap_frac']:.2f}"]]
+    return row, payload
+
+
+def _rate_rows(quick: bool):
+    """Wall-clock attainment vs Poisson arrival rate, ≥ 2 policies."""
+    from repro.core.profiler import LatencyProfiler
+    from repro.engine.request import RuntimeRequest
+
+    # latency model fit from this engine config's own profiled behaviour
+    # (slo-reanneal needs slack projections)
+    prof = LatencyProfiler()
+    eng, cfg = _make_engine()
+    eng.profiler = prof
+    eng.run_fcfs([RuntimeRequest(request=r, prompt_tokens=p,
+                                 max_new_tokens=r.output_len)
+                  for r, p in _trace(6, seed=0, rate=0.0)])
+    model = prof.fit()
+
+    # top rates exceed the tiny engine's ~100 req/s service capacity, and
+    # the tighter non-quick SLO scale puts the queueing delay of the
+    # overloaded points past the TTFT budgets — the attainment-vs-rate
+    # curve shows the saturation knee (quick mode keeps loose SLOs: CI
+    # machines are too noisy for a deadline-edge assertion)
+    n = 10 if quick else 24
+    rates = (20.0, 60.0) if quick else (10.0, 60.0, 240.0, 960.0)
+    scale = 0.25 if quick else 0.05
+    rows, payload = [], {}
+    for rate in rates:
+        for policy in ("fcfs", "slo-reanneal"):
+            loop, _ = _serve(_trace(n, seed=11, rate=rate, scale=scale),
+                             policy, overlap=True, model=model)
+            s = loop.metrics.summary()
+            key = f"rate{rate:g}_{policy}"
+            payload[key] = s
+            rows.append([f"serve_{key}", round(s["e2e_mean"] * 1e6, 1),
+                         f"att={s['attainment']:.3f};G={s['G']:.4f};"
+                         f"ttft_mean={s['ttft_mean'] * 1e3:.1f}ms;"
+                         f"tbt_p90={s['tbt_p90'] * 1e3:.2f}ms;"
+                         f"qdepth={s.get('queue_depth_mean', 0):.1f};"
+                         f"tok_s={s['tokens_per_s']:.0f}"])
+    return rows, payload
+
+
+def main(quick: bool = False):
+    rows, payload = _overlap_rows(quick)
+    rate_rows, rate_payload = _rate_rows(quick)
+    rows.extend(rate_rows)
+    payload = {"overlap": payload, "rates": rate_payload}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# saved {path}")
+    emit(rows, ["name", "us_per_call", "derived"], "serving")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

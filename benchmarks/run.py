@@ -20,8 +20,8 @@ def main() -> None:
     from benchmarks import (bench_annealing_params, bench_fit,
                             bench_kernels, bench_latency_pred,
                             bench_move_ablation, bench_online,
-                            bench_output_pred,
-                            bench_overall, bench_overhead, bench_scaling)
+                            bench_output_pred, bench_overall,
+                            bench_overhead, bench_scaling, bench_serving)
     suites = {
         "fig7_overall": bench_overall.main,
         "table1_overhead": bench_overhead.main,
@@ -33,6 +33,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "move_ablation": bench_move_ablation.main,
         "online": bench_online.main,
+        "serving": bench_serving.main,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -81,6 +81,40 @@ def token_stream(n_tokens: int, vocab: int, seed: int = 0,
     return rng.integers(0, vocab, size=(batch, n_tokens), dtype=np.int32)
 
 
+# ------------------------------------------------------------------ serving
+def sample_serve_workload(n: int, vocab: int, seed: int = 0,
+                          scale: float = 1.0, arrival_rate: float = 0.0,
+                          rng: Optional[np.random.Generator] = None,
+                          in_range=(16, 96), out_range=(8, 48)):
+    """Small mixed chat/code token workload for live serving runs.
+
+    Returns ``[(Request, prompt_tokens)]`` (the token-workload
+    convention): alternating code (e2e SLO) and chat (TTFT+TPOT SLO)
+    requests with uniform prompt/output lengths — launcher- and
+    CI-sized, unlike the paper-statistics :func:`sample_requests`.
+    ``scale`` loosens/tightens every SLO together; ``arrival_rate`` > 0
+    spaces arrivals by an exponential (Poisson process) clock, 0 means
+    everything arrives at t=0.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    out = []
+    t = 0.0
+    for i in range(n):
+        code = i % 2 == 0
+        slo = SLO(e2e=8.0 * scale) if code else SLO(ttft=3.0 * scale,
+                                                    tpot=0.5 * scale)
+        lin = int(rng.integers(*in_range))
+        lout = int(rng.integers(*out_range))
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        req = Request(req_id=i, task_type="code" if code else "chat",
+                      input_len=lin, slo=slo, output_len=lout,
+                      arrival_time=t)
+        out.append((req, rng.integers(0, vocab, lin).astype(np.int32)))
+    return out
+
+
 # --------------------------------------------------------------- multi-turn
 def sample_multiturn_requests(n_conversations: int, turns: int = 3,
                               seed: int = 0,

@@ -151,6 +151,14 @@ class Engine:
         self.chunked_prefill = 0 if cfg.mla is not None else chunked_prefill
         self._warm = set()
         self.cow_copies = 0          # copy-on-write page splits performed
+        # fused decode+sample dispatch path (serving loop): one jit, one
+        # compilation per pow-2 batch width; donation only in paged mode
+        # (the dense step merges with `where`, allocating fresh arrays)
+        if self.paged:
+            self._dispatch_fn = jax.jit(self._decode_dispatch_paged,
+                                        donate_argnums=(1,))
+        else:
+            self._dispatch_fn = jax.jit(self._decode_dispatch_dense)
 
     # ------------------------------------------------------------ jitted
     def _decode_step(self, params, cache, tokens, active):
@@ -220,6 +228,102 @@ class Engine:
         out = fn(self.params, self.cache, *args)
         jax.block_until_ready(out)
         self.cache = jax.tree.map(jnp.asarray, saved)
+
+    # --------------------------------------- dispatch/sync split (serving)
+    def _slice_slots(self, cache, width):
+        """View of the first ``width`` slots of a paged cache: per-slot
+        state (pos, block tables, SSM conv/ssm) is sliced, shared page
+        arrays pass through untouched."""
+        return {
+            "pos": cache["pos"][:width],
+            "block_tables": cache["block_tables"][:width],
+            "layers": [{k: (v[:width] if k in ("conv", "ssm") else v)
+                        for k, v in l.items()} for l in cache["layers"]]}
+
+    def _merge_slots(self, cache, sub, width):
+        """Scatter a sliced sub-cache back into the full slot pool."""
+        layers = []
+        for full_l, sub_l in zip(cache["layers"], sub["layers"]):
+            layers.append({k: (full_l[k].at[:width].set(sub_l[k])
+                               if k in ("conv", "ssm") else sub_l[k])
+                           for k in full_l})
+        return {"pos": cache["pos"].at[:width].set(sub["pos"]),
+                "block_tables": cache["block_tables"], "layers": layers}
+
+    def _decode_dispatch_paged(self, params, cache, tokens, active, key):
+        """Fused decode round + on-device sampling over the first
+        ``tokens.shape[0]`` slots (a pow-2 batch bucket).  Sampling in
+        the same jit means the sampled ids stay on device: the next
+        round can be dispatched from them without a host round-trip —
+        the core of the serving loop's one-step lookahead."""
+        width = tokens.shape[0]
+        if width == self.max_slots:
+            logits, new_cache = self._decode_step_paged(params, cache,
+                                                        tokens, active)
+            return sample(logits, key, self.temperature), new_cache
+        sub = self._slice_slots(cache, width)
+        logits, new_sub = self._decode_step_paged(params, sub, tokens,
+                                                  active)
+        return (sample(logits, key, self.temperature),
+                self._merge_slots(cache, new_sub, width))
+
+    def _decode_dispatch_dense(self, params, cache, tokens, active, key):
+        """Dense-layout fused decode+sample (always full slot width)."""
+        logits, new_cache = self._decode_step(params, cache, tokens, active)
+        return sample(logits, key, self.temperature), new_cache
+
+    def dispatch_decode(self, feed, active_np, width: Optional[int] = None,
+                        lookahead: int = 0):
+        """Dispatch one fused decode+sample round WITHOUT syncing.
+
+        ``feed``: ``[max_slots, 1]`` int32 device array of input token
+        ids (each running slot's last sampled token — typically the
+        device output of the previous ``dispatch_decode``, so chained
+        rounds never touch the host).  ``active_np``: host bool mask.
+        ``width``: static batch width (a pow-2 bucket covering every
+        active slot; paged mode only) — smaller widths skip the dead
+        tail of the slot pool at one extra compile per bucket.
+        ``lookahead``: extra write positions the copy-on-write guard
+        must cover when earlier rounds are still in flight.
+
+        Returns the device array of sampled next-token ids (``[width]``)
+        immediately; the caller reads it back later (``np.asarray``)
+        after doing host-side work — scheduling, stream delivery, block
+        accounting — while the device computes.
+        """
+        B = self.max_slots if (width is None or not self.paged) \
+            else int(width)
+        if not (0 < B <= self.max_slots):
+            raise ValueError(f"width {width} outside (0, {self.max_slots}]")
+        if any(active_np[B:]):
+            raise ValueError(f"active slot >= dispatch width {B}")
+        if self.paged:
+            self._cow_guard(lookahead)
+        if ("dispatch", B) not in self._warm:
+            args = (feed[:B], jnp.zeros(B, bool),
+                    jax.random.PRNGKey(0))
+            if self.paged:
+                self._warm_paged(self._dispatch_fn, *args)
+            else:
+                jax.block_until_ready(
+                    self._dispatch_fn(self.params, self.cache, *args))
+            self._warm.add(("dispatch", B))
+        self.key, sk = jax.random.split(self.key)
+        toks, self.cache = self._dispatch_fn(
+            self.params, self.cache, feed[:B],
+            jnp.asarray(active_np[:B]), sk)
+        return toks
+
+    def finish_slot(self, rt: RuntimeRequest):
+        """Release a finished request's slot: publish its KV-valid span
+        (prompt + all but the never-written final token) to the prefix
+        index, return its blocks, and free the slot.  The caller stamps
+        phase/finish_time — the serving loop uses wall-clock stamps, the
+        batch loop the engine clock."""
+        self._index_span(rt, rt.input_len + len(rt.generated) - 1)
+        self._release_blocks(rt.slot)
+        self.slot_free[rt.slot] = True
+        self.slot_req[rt.slot] = None
 
     # ------------------------------------------------------------ blocks
     def _blocks_needed(self, rt: RuntimeRequest) -> int:
@@ -342,20 +446,25 @@ class Engine:
         self.cow_copies += 1
         return new
 
-    def _cow_guard(self):
+    def _cow_guard(self, lookahead: int = 0):
         """Before a decode round writes, split any shared page a slot's
         write frontier sits in.  Block-aligned matching (capped below
         the full context) makes this structurally unreachable through
         normal admission — kept as defense in depth so a shared page
-        can never be scribbled on."""
+        can never be scribbled on.  ``lookahead`` widens the guard to
+        the next write positions when earlier decode rounds are still
+        in flight (the serving loop's overlapped dispatch): their host
+        token counts lag the device by that many rounds."""
         for slot, rt in enumerate(self.slot_req):
             if rt is None:
                 continue
             pos = rt.input_len + len(rt.generated) - 1
-            bi = (pos % self.slot_len) // self.block_size
             blocks = self._slot_blocks[slot]
-            if bi < len(blocks) and self.pool.refcount(blocks[bi]) > 1:
-                self._cow_block(slot, bi)
+            for d in range(lookahead + 1):
+                bi = ((pos + d) % self.slot_len) // self.block_size
+                if bi < len(blocks) and \
+                        self.pool.refcount(blocks[bi]) > 1:
+                    self._cow_block(slot, bi)
 
     # ------------------------------------------------------------ slots
     def _write_slot(self, slot: int, cache1):
@@ -558,14 +667,7 @@ class Engine:
                 len(rt.generated) >= rt.max_new_tokens:
             rt.phase = Phase.FINISHED
             rt.finish_time = self.clock
-            # publish the full conversation's KV span (prompt + all but
-            # the never-written final sampled token) before releasing —
-            # the index's refs keep these pages alive for follow-up
-            # turns that extend this conversation
-            self._index_span(rt, rt.input_len + len(rt.generated) - 1)
-            self._release_blocks(rt.slot)
-            self.slot_free[rt.slot] = True
-            self.slot_req[rt.slot] = None
+            self.finish_slot(rt)
 
     def decode_round(self):
         """One decode iteration over every active slot."""
@@ -603,6 +705,50 @@ class Engine:
         for i, rt in enumerate(list(self.slot_req)):
             if rt is not None:
                 self._push_token(rt, int(toks[i]))
+
+    # ------------------------------------------------------------ views
+    def active_requests(self) -> List[RuntimeRequest]:
+        """Running requests in slot order — the ordering every
+        :class:`SchedulerView` built from this engine uses for its
+        ``active`` tuple (so ``Decision.preempt`` indices resolve)."""
+        return [rt for rt in self.slot_req if rt is not None]
+
+    def build_view(self, waiting: Sequence[RuntimeRequest],
+                   disc: Optional[ExecutionDiscipline],
+                   model: Optional[LinearLatencyModel]) -> SchedulerView:
+        """:class:`SchedulerView` over the engine's in-flight state plus
+        a waiting list — shared by the batch loop (``run_policy``) and
+        the streaming serving loop, so policies see identical views in
+        both regimes.  ``now`` is the engine clock (the serving loop
+        syncs it to the wall clock each tick)."""
+        active_rts = self.active_requests()
+        b = max(len(active_rts), 1)
+        return SchedulerView(
+            pending=tuple(rt.request for rt in waiting),
+            active=tuple(make_active_view(
+                rt.request, len(rt.generated),
+                rt.max_new_tokens - len(rt.generated),
+                rt.input_len + len(rt.generated), self.clock,
+                rt.ttft_time, rt.submit_time, b, model,
+                # only pages this request exclusively owns are freeable
+                # by preempting it — shared/indexed pages survive its
+                # eviction
+                blocks_held=(sum(
+                    1 for bl in self._slot_blocks[rt.slot]
+                    if self.pool.refcount(bl) == 1)
+                    if self.paged else 0))
+                for rt in active_rts),
+            now=self.clock, free=len(self.free_slots()),
+            max_batch=self.max_slots,
+            pending_generated=tuple(len(rt.generated) for rt in waiting),
+            pending_cached=(tuple(self._probe_cached(rt)
+                                  for rt in waiting)
+                            if self.paged else ()),
+            discipline=disc,
+            free_blocks=(self._admission_blocks() if self.paged else None),
+            total_blocks=(self.pool.total if self.paged else None),
+            block_size=(self.block_size if self.paged else 0),
+            pages_per_slot=(self.pages_per_slot if self.paged else 0))
 
     # ------------------------------------------------------------ runs
     def run_policy(self, rts: Sequence[RuntimeRequest],
@@ -679,38 +825,9 @@ class Engine:
             admitted = False
             if waiting and (free or (preemptive
                                      and not all(self.slot_free))):
-                active_rts = [rt for rt in self.slot_req if rt is not None]
-                b = max(len(active_rts), 1)
-                view = SchedulerView(
-                    pending=tuple(rt.request for rt in waiting),
-                    active=tuple(make_active_view(
-                        rt.request, len(rt.generated),
-                        rt.max_new_tokens - len(rt.generated),
-                        rt.input_len + len(rt.generated), self.clock,
-                        rt.ttft_time, rt.submit_time, b, model,
-                        # only pages this request exclusively owns are
-                        # freeable by preempting it — shared/indexed
-                        # pages survive its eviction
-                        blocks_held=(sum(
-                            1 for bl in self._slot_blocks[rt.slot]
-                            if self.pool.refcount(bl) == 1)
-                            if self.paged else 0))
-                        for rt in active_rts),
-                    now=self.clock, free=len(free),
-                    max_batch=self.max_slots,
-                    pending_generated=tuple(len(rt.generated)
-                                            for rt in waiting),
-                    pending_cached=(tuple(self._probe_cached(rt)
-                                          for rt in waiting)
-                                    if self.paged else ()),
-                    discipline=disc,
-                    free_blocks=(self._admission_blocks() if self.paged
-                                 else None),
-                    total_blocks=(self.pool.total if self.paged else None),
-                    block_size=(self.block_size if self.paged else 0),
-                    pages_per_slot=(self.pages_per_slot if self.paged
-                                    else 0))
+                view = self.build_view(waiting, disc, model)
                 admit, preempt = normalize_decision(pol.decide(view), view)
+                active_rts = self.active_requests()
                 for j in preempt:
                     vict = active_rts[j]
                     # re-prefill must fit: prompt + generated + next token

@@ -1,14 +1,19 @@
-"""Serving launcher: engine + SLO-aware scheduler on a workload file or a
-synthetic mixed workload.
+"""Serving launcher: live streaming loop (default) or batch engine run
+on a synthetic mixed workload.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --n 12 --policy slo|fcfs|slo-preempt [--discipline stall|chunked:32]
+      --n 12 --policy slo-reanneal:jax --arrival-rate 20
 
-Policies and disciplines are resolved through the v2 registry
-(``repro.core.policies.make``): ``slo`` plans batches offline with
-Algorithm 1/2 and dispatches them; ``fcfs`` and ``slo-preempt`` drive the
-engine's admission loop directly (the latter may evict running requests
-when a tight-SLO arrival would otherwise miss — KV is recomputed).
+``--policy`` accepts ANY ``repro.core.policies.make`` registry name
+(``fcfs``, ``priority``, ``slo-reanneal``, ``slo-reanneal:jax``,
+``slo-preempt``, …) plus ``slo``/``planned`` for the offline Algorithm
+1/2 planner (plan batches, then dispatch).  Streaming mode drives the
+:class:`repro.serving.ServeLoop` — arrival-timed ingestion, per-token
+wall-clock streams, overlapped host scheduling + device execution — and
+reports *measured* TTFT/TBT/attainment; ``--mode batch`` runs the
+engine's batch admission loop on its internal clock instead (the
+planner policies always use batch mode: their plan needs the whole
+workload up front).
 """
 from __future__ import annotations
 
@@ -22,31 +27,46 @@ from repro.configs import get_config, get_reduced
 from repro.core import SAParams, SLOAwareScheduler
 from repro.core.policies import make, make_discipline
 from repro.core.profiler import LatencyProfiler
-from repro.core.slo import SLO, Request
-from repro.data.synthetic import CHAT_SLO, CODE_SLO
+from repro.data.synthetic import sample_serve_workload
 from repro.engine.engine import Engine
 from repro.engine.request import RuntimeRequest
 from repro.models import init_params
+from repro.serving import ServeLoop
 
 
-def synth_workload(n, vocab, rng, scale=1.0, arrival_rate=0.0):
-    rts = []
-    t = 0.0
-    for i in range(n):
-        code = i % 2 == 0
-        slo = SLO(e2e=8.0 * scale) if code else SLO(ttft=3.0 * scale,
-                                                    tpot=0.5 * scale)
-        lin = int(rng.integers(16, 96))
-        lout = int(rng.integers(8, 48))
-        if arrival_rate > 0:
-            t += float(rng.exponential(1.0 / arrival_rate))
-        rts.append(RuntimeRequest(
-            request=Request(req_id=i, task_type="code" if code else "chat",
-                            input_len=lin, slo=slo, output_len=lout,
-                            arrival_time=t),
-            prompt_tokens=rng.integers(0, vocab, lin).astype(np.int32),
-            max_new_tokens=lout))
-    return rts
+def _to_rts(pairs):
+    return [RuntimeRequest(request=r, prompt_tokens=p,
+                           max_new_tokens=r.output_len)
+            for r, p in pairs]
+
+
+def fit_latency_model(cfg, params, max_batch, rng, n_warm=6):
+    """Fit the linear latency model on a short profiled warmup run."""
+    prof = LatencyProfiler()
+    warm = Engine(cfg, params, max_slots=max_batch, max_seq_len=256,
+                  profiler=prof)
+    warm.run_fcfs(_to_rts(sample_serve_workload(n_warm, cfg.vocab_size,
+                                                rng=rng)))
+    return prof.fit()
+
+
+def run_planner(eng, rts, model, discipline, max_batch, respect):
+    """Offline Algorithm 1/2: plan batches, score, dispatch."""
+    reqs = [rt.request for rt in rts]
+    for rt, r in zip(rts, reqs):
+        r.predicted_output_len = rt.max_new_tokens
+    sched = SLOAwareScheduler(model, num_instances=1, max_batch=max_batch,
+                              sa_params=SAParams(seed=0))
+    outcome = sched.schedule(reqs)
+    for disc in ("stall", f"chunked:{discipline.chunk_size or 32}"):
+        ev = sched.evaluate_plan(outcome, discipline=disc)
+        print(f"plan under {disc:<12}: predicted G={ev.G:.4f} "
+              f"attainment={ev.attainment:.2f}")
+    by_id = {rt.req_id: rt for rt in rts}
+    planned = [[by_id[r.req_id] for r in b]
+               for b in outcome.queues[0].batches]
+    return eng.run_planned(planned, discipline=discipline, model=model,
+                           respect_arrivals=respect)
 
 
 def main():
@@ -54,13 +74,20 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--n", type=int, default=12)
-    ap.add_argument("--policy", choices=("slo", "fcfs", "slo-preempt"),
-                    default="slo")
+    ap.add_argument("--policy", default="slo",
+                    help="any policies.make registry name (fcfs, priority, "
+                         "slo-reanneal[:jax], slo-preempt, ...) or "
+                         "slo/planned for the offline planner")
+    ap.add_argument("--mode", choices=("stream", "batch"), default="stream",
+                    help="stream: live ServeLoop with measured wall-clock "
+                         "metrics; batch: engine admission loop")
     ap.add_argument("--discipline", default="stall",
-                    help="stall | chunked | chunked:<size>")
+                    help="stall | chunked | chunked:<size> (batch mode)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests/s; 0 = all submitted at t=0")
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="stream mode: synchronous reference loop")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -71,36 +98,40 @@ def main():
                          "dry-run for qwen2-vl shapes")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    rts = synth_workload(args.n, cfg.vocab_size, rng,
-                         arrival_rate=args.arrival_rate)
+    pairs = sample_serve_workload(args.n, cfg.vocab_size, rng=rng,
+                                  arrival_rate=args.arrival_rate)
     discipline = make_discipline(args.discipline)
-
-    prof = LatencyProfiler()
-    warm = Engine(cfg, params, max_slots=args.max_batch, max_seq_len=256,
-                  profiler=prof)
-    warm.run_fcfs(synth_workload(6, cfg.vocab_size, rng))
-    model = prof.fit()
+    model = fit_latency_model(cfg, params, args.max_batch, rng)
 
     eng = Engine(cfg, params, max_slots=args.max_batch, max_seq_len=256)
+    planner = args.policy in ("slo", "planned")
+    mode = args.mode
+    if mode == "stream" and discipline.chunk_size:
+        # the streaming loop runs whole-prompt prefill only (see
+        # docs/serving.md); chunked disciplines use the batch loop
+        print(f"note: {discipline!r} is unsupported in stream mode; "
+              "running --mode batch")
+        mode = "batch"
+    if mode == "stream" and not planner:
+        loop = ServeLoop(eng, args.policy, model=model,
+                         overlap=not args.no_overlap)
+        loop.start(warm_lengths=[len(p) for _, p in pairs])
+        loop.submit_trace(pairs)
+        out = loop.serve()
+        s = loop.metrics.summary()
+        print(f"policy={args.policy} mode=stream arch={cfg.name} "
+              f"overlap={not args.no_overlap} "
+              f"G={s['G']:.4f} attainment={s['attainment']:.2f} "
+              f"ttft_mean={s['ttft_mean'] * 1e3:.1f}ms "
+              f"tbt_p90={s['tbt_p90'] * 1e3:.2f}ms "
+              f"tok/s={s['tokens_per_s']:.0f} "
+              f"preemptions={s['preemptions']}")
+        return
+    rts = _to_rts(pairs)
     respect = args.arrival_rate > 0
-    if args.policy == "slo":
-        reqs = [rt.request for rt in rts]
-        for rt, r in zip(rts, reqs):
-            r.predicted_output_len = rt.max_new_tokens
-        sched = SLOAwareScheduler(model, num_instances=1,
-                                  max_batch=args.max_batch,
-                                  sa_params=SAParams(seed=0))
-        outcome = sched.schedule(reqs)
-        # score the plan under both disciplines before dispatch
-        for disc in ("stall", f"chunked:{discipline.chunk_size or 32}"):
-            ev = sched.evaluate_plan(outcome, discipline=disc)
-            print(f"plan under {disc:<12}: predicted G={ev.G:.4f} "
-                  f"attainment={ev.attainment:.2f}")
-        by_id = {rt.req_id: rt for rt in rts}
-        planned = [[by_id[r.req_id] for r in b]
-                   for b in outcome.queues[0].batches]
-        out = eng.run_planned(planned, discipline=discipline, model=model,
-                              respect_arrivals=respect)
+    if planner:
+        out = run_planner(eng, rts, model, discipline, args.max_batch,
+                          respect)
     else:
         pol = make(args.policy, model=model, max_batch=args.max_batch)
         out = eng.run_policy(rts, pol, discipline=discipline, model=model,

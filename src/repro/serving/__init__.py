@@ -1,0 +1,12 @@
+"""Async streaming serving: a long-running loop over the slot-pool
+engine with arrival-timed ingestion, per-request token streams, and
+overlapped host-scheduling / device-execution.  Wall-clock TTFT / TBT /
+e2e are *measured* at the token-delivery boundary rather than modelled.
+"""
+from repro.serving.loop import ServeLoop
+from repro.serving.metrics import (RequestTimeline, ServingMetrics,
+                                   StepGauge)
+from repro.serving.stream import TokenEvent, TokenStream
+
+__all__ = ["ServeLoop", "ServingMetrics", "RequestTimeline", "StepGauge",
+           "TokenEvent", "TokenStream"]

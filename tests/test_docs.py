@@ -10,7 +10,8 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC_FILES = [ROOT / "README.md",
              ROOT / "docs" / "ARCHITECTURE.md",
              ROOT / "docs" / "annealer.md",
-             ROOT / "docs" / "paged_kv.md"]
+             ROOT / "docs" / "paged_kv.md",
+             ROOT / "docs" / "serving.md"]
 
 
 def _python_blocks():
@@ -28,7 +29,7 @@ def _python_blocks():
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     for page in ("docs/ARCHITECTURE.md", "docs/annealer.md",
-                 "docs/paged_kv.md"):
+                 "docs/paged_kv.md", "docs/serving.md"):
         assert page in readme, f"README does not link {page}"
         assert (ROOT / page).exists(), f"{page} missing"
 
