@@ -1,0 +1,200 @@
+"""Trace-replay goodput sweep: SLO attainment / goodput / mean latency
+vs load for the registry policy zoo — the repo's paper-figure-shaped
+artifact (the paper's headline attainment-vs-rate comparison, but
+against a stronger field of competitors and across several model
+architectures).
+
+Workloads replay the checked-in dataset histograms
+(``experiments/traces/*.json`` — Python-Code-23k-ShareGPT +
+ShareGPT_Vicuna shapes with the paper's per-task SLOs) through the
+unified event core (:func:`repro.core.events.simulate`) at thousands of
+requests.  Each model config gets an *analytic* latency model scaled
+from the paper's fitted Table 2 coefficients (Qwen2.5-7B on V100s):
+compute-bound terms scale with the architecture's parameter count,
+attention/KV-bound terms with its KV bytes per token.  The differential
+conformance suite (``tests/test_conformance.py``) pins the event core
+to the real engine, which is what makes these simulated curves
+trustworthy at scales the CI engine cannot reach.
+
+Load is swept as a fraction of each config's estimated saturation
+throughput, so curves are comparable across architectures; the arrival
+process is swept too (Poisson / bursty / diurnal) in the full run.
+
+Outputs (``experiments/bench/``):
+  * ``BENCH_goodput.json``        — per-(config, policy, process, load)
+    summaries + the analytic models (fully deterministic: no wall times,
+    guarded by the seeded-determinism regression test)
+  * ``goodput_attainment.csv``    — the attainment-vs-load long table
+    (one row per config × policy × process × load — the figure data)
+  * ``goodput.csv`` via ``common.emit`` — trajectory rows (these carry
+    wall-clock sim times and are *not* part of the deterministic
+    artifact)
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit, timeit
+from repro.configs import get_config
+from repro.core import PAPER_TABLE2, LinearLatencyModel, SAParams, simulate
+from repro.core.policies import make
+from repro.data.traces import sample_trace
+from repro.models.cache import kv_bytes_per_token
+
+#: the sweep's architectures: the paper's evaluation model + a smaller
+#: dense code model + a long-context GQA model with heavy KV traffic
+CONFIGS = ("qwen2.5-7b", "starcoder2-3b", "phi4-mini-3.8b")
+
+#: every policy that draws a curve; quick mode keeps the acceptance
+#: field (fcfs + both paper policies + the W-index entrant)
+POLICIES = ("fcfs", "slo-reanneal", "slo-preempt",
+            "index", "index:sjf", "index:edf", "dynamic-chunk")
+QUICK_POLICIES = ("fcfs", "slo-reanneal", "slo-preempt", "index")
+
+MAX_BATCH = 8
+
+
+def analytic_model(cfg, base: LinearLatencyModel = PAPER_TABLE2,
+                   ref=None) -> LinearLatencyModel:
+    """Scale the paper's fitted coefficients to another architecture:
+    compute-bound terms (prefill FLOPs, per-request decode compute,
+    weight streaming) go with the parameter count; attention/KV-bound
+    terms (the ``·l`` interactions) go with KV bytes per token."""
+    ref = ref if ref is not None else get_config("qwen2.5-7b")
+    s_p = cfg.param_count() / ref.param_count()
+    s_kv = kv_bytes_per_token(cfg) / kv_bytes_per_token(ref)
+    return LinearLatencyModel(
+        alpha_p=base.alpha_p * s_p, beta_p=base.beta_p * s_p,
+        gamma_p=base.gamma_p * s_kv, delta_p=base.delta_p,
+        alpha_d=base.alpha_d * s_kv, beta_d=base.beta_d * s_p,
+        gamma_d=base.gamma_d * s_kv, delta_d=base.delta_d * s_p)
+
+
+def saturation_rps(model: LinearLatencyModel, med_in: int,
+                   med_out: int, max_batch: int = MAX_BATCH) -> float:
+    """Estimated saturation throughput (req/s): a full batch of median
+    requests shares its decode rounds, so the pipeline completes
+    ``max_batch`` requests per solo-prefill + batched-decode span."""
+    t = model.prefill_time(1, med_in) \
+        + model.decode_time(max_batch, med_in, med_out)
+    return max_batch / t
+
+
+def _median_lengths(seed: int = 0, n: int = 2000):
+    probe = sample_trace(n, seed=seed)
+    return (int(np.median([r.input_len for r in probe])),
+            int(np.median([r.output_len for r in probe])))
+
+
+def _run_one(cfg_name: str, model: LinearLatencyModel, policy: str,
+             n: int, rate: float, process: str, seed: int):
+    """One (config, policy, process, load) cell through the event core."""
+    reqs = sample_trace(n, rate=rate, process=process, seed=seed)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    pol = make(policy, model=model, max_batch=MAX_BATCH,
+               sa_params=SAParams(seed=0))
+    # dynamic-chunk carries its own adaptive chunked discipline — that
+    # is the policy; everyone else runs the stalling default
+    disc = getattr(pol, "discipline", None)
+    res, dt = timeit(simulate, reqs, model, MAX_BATCH, pol,
+                     discipline=disc, respect_arrivals=True, repeat=1)
+    ttfts = list(res.ttft.values())
+    return {
+        "attainment": round(res.attainment, 4),
+        "goodput": round(res.G, 6),
+        "mean_latency": round(res.avg_latency, 4),
+        "mean_ttft": round(float(np.mean(ttfts)), 4) if ttfts else 0.0,
+        "p90_ttft": round(float(np.percentile(ttfts, 90)), 4)
+        if ttfts else 0.0,
+        "preemptions": res.n_preempted,
+        "n": res.n,
+    }, dt
+
+
+def sweep(configs=CONFIGS, policies=POLICIES, loads=(0.4, 0.8, 1.2, 1.6),
+          processes=("poisson",), n: int = 2000, seed: int = 0):
+    """The full sweep as a pure function of its arguments — returns
+    ``(emit_rows, payload, curve_rows)``; everything except the
+    ``us_per_call`` column of ``emit_rows`` is deterministic in
+    ``seed`` (the determinism regression test relies on this)."""
+    med_in, med_out = _median_lengths(seed=seed)
+    payload = {"meta": {"n": n, "seed": seed, "max_batch": MAX_BATCH,
+                        "median_input": med_in, "median_output": med_out},
+               "configs": {}, "runs": []}
+    rows, curve = [], []
+    for cfg_name in configs:
+        cfg = get_config(cfg_name)
+        model = analytic_model(cfg)
+        cap = saturation_rps(model, med_in, med_out)
+        payload["configs"][cfg_name] = {
+            "params_b": round(cfg.param_count() / 1e9, 3),
+            "kv_bytes_per_token": kv_bytes_per_token(cfg),
+            "model": dataclasses.asdict(model),
+            "saturation_rps": round(cap, 4),
+        }
+        for process in processes:
+            for load in loads:
+                rate = cap * load
+                for policy in policies:
+                    summ, dt = _run_one(cfg_name, model, policy, n,
+                                        rate, process, seed)
+                    run = {"config": cfg_name, "policy": policy,
+                           "process": process, "load": load,
+                           "rate": round(rate, 4), **summ}
+                    payload["runs"].append(run)
+                    curve.append([cfg_name, policy, process, load,
+                                  round(rate, 4), summ["attainment"],
+                                  summ["goodput"], summ["mean_latency"]])
+                    rows.append([
+                        f"goodput_{cfg_name}_{process}_load{load:g}_"
+                        f"{policy}", round(dt * 1e6, 1),
+                        f"att={summ['attainment']:.3f};"
+                        f"G={summ['goodput']:.5f};"
+                        f"lat={summ['mean_latency']:.2f}s;"
+                        f"evictions={summ['preemptions']}"])
+    return rows, payload, curve
+
+
+def main(quick: bool = False):
+    if quick:
+        rows, payload, curve = sweep(
+            configs=CONFIGS[:1], policies=QUICK_POLICIES,
+            loads=(0.5, 1.2), processes=("poisson",), n=300)
+    else:
+        rows, payload, curve = sweep()
+        # non-Poisson arrival processes at the contended load, paper
+        # config only: burstiness is where index/preempt spread out
+        b_rows, b_payload, b_curve = sweep(
+            configs=CONFIGS[:1], policies=POLICIES,
+            loads=(1.2,), processes=("bursty", "diurnal"), n=2000)
+        rows.extend(b_rows)
+        payload["runs"].extend(b_payload["runs"])
+        curve.extend(b_curve)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_goodput.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# saved {path}")
+    cpath = os.path.join(RESULTS_DIR, "goodput_attainment.csv")
+    with open(cpath, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["config", "policy", "process", "load", "rate",
+                    "attainment", "goodput", "mean_latency"])
+        w.writerows(curve)
+    print(f"# saved {cpath}")
+    emit(rows, ["name", "us_per_call", "derived"], "goodput")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -18,10 +18,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_annealing_params, bench_fit,
-                            bench_kernels, bench_latency_pred,
-                            bench_move_ablation, bench_online,
-                            bench_output_pred, bench_overall,
-                            bench_overhead, bench_scaling, bench_serving)
+                            bench_goodput, bench_kernels,
+                            bench_latency_pred, bench_move_ablation,
+                            bench_online, bench_output_pred,
+                            bench_overall, bench_overhead, bench_scaling,
+                            bench_serving)
     suites = {
         "fig7_overall": bench_overall.main,
         "table1_overhead": bench_overhead.main,
@@ -34,6 +35,7 @@ def main() -> None:
         "move_ablation": bench_move_ablation.main,
         "online": bench_online.main,
         "serving": bench_serving.main,
+        "goodput": bench_goodput.main,
     }
     print("name,us_per_call,derived")
     failed = []

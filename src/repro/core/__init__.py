@@ -43,12 +43,14 @@ from repro.core.annealing import (SAParams, SAResult, apply_move,
 from repro.core.exhaustive import exhaustive_search
 from repro.core.profiler import (LatencyProfiler, MemoryModel,
                                  OutputLengthPredictor)
-from repro.core.policies import (ActiveView, AdmissionPolicy, ChunkedPrefill,
-                                 Decision, ExecutionDiscipline, FCFSPolicy,
-                                 PlannedPolicy, SchedulerView,
-                                 SchedulingPolicy, SLOPreemptPolicy,
-                                 SLOReannealPolicy, StallingPrefill,
-                                 as_scheduling_policy, make, make_discipline)
+from repro.core.policies import (ActiveView, AdaptiveChunkedPrefill,
+                                 AdmissionPolicy, ChunkedPrefill, Decision,
+                                 DynamicChunkPolicy, ExecutionDiscipline,
+                                 FCFSPolicy, IndexPolicy, PlannedPolicy,
+                                 SchedulerView, SchedulingPolicy,
+                                 SLOPreemptPolicy, SLOReannealPolicy,
+                                 StallingPrefill, as_scheduling_policy,
+                                 make, make_discipline)
 from repro.core.scheduler import (InstanceQueue, ScheduleOutcome,
                                   SLOAwareScheduler)
 from repro.core.events import SimResult, simulate
@@ -68,7 +70,9 @@ __all__ = [
     # scheduling API v2
     "SchedulingPolicy", "SchedulerView", "ActiveView", "Decision",
     "FCFSPolicy", "PlannedPolicy", "SLOReannealPolicy", "SLOPreemptPolicy",
+    "IndexPolicy", "DynamicChunkPolicy",
     "ExecutionDiscipline", "StallingPrefill", "ChunkedPrefill",
+    "AdaptiveChunkedPrefill",
     "make", "make_discipline", "as_scheduling_policy",
     # v1 deprecation shim
     "AdmissionPolicy",

@@ -83,19 +83,37 @@ class LinearLatencyModel:
         return LinearLatencyModel(**vals)
 
 
-def _ols(samples: Sequence[Tuple[float, float, float]]):
-    """samples: (b, l, t). Returns (alpha, beta, gamma, delta)."""
+def _ols(samples: Sequence[Tuple[float, float, float]], nonneg: bool = False):
+    """samples: (b, l, t). Returns (alpha, beta, gamma, delta).
+
+    With ``nonneg`` the fit is constrained to non-negative coefficients
+    by backward elimination: refit without the most negative column
+    until none remain.  Unconstrained OLS on a handful of noisy
+    wall-clock samples can balance a large positive term against a
+    large negative one — fine inside the sampled range, but the
+    extrapolated cost can go *negative*, which runs an event-driven
+    simulator clock backwards.  Elimination keeps the surviving terms
+    least-squares-calibrated instead of naively truncating them.
+    """
     arr = np.asarray(samples, np.float64)
     b, l, t = arr[:, 0], arr[:, 1], arr[:, 2]
     X = np.stack([b * l, b, l, np.ones_like(b)], axis=1)
-    coef, *_ = np.linalg.lstsq(X, t, rcond=None)
-    return tuple(coef)
+    keep = list(range(X.shape[1]))
+    while True:
+        coef, *_ = np.linalg.lstsq(X[:, keep], t, rcond=None)
+        if not nonneg or len(coef) == 0 or float(coef.min()) >= 0.0:
+            break
+        keep.pop(int(np.argmin(coef)))
+    full = np.zeros(X.shape[1])
+    full[keep] = coef
+    return tuple(full)
 
 
-def fit(prefill_samples, decode_samples) -> LinearLatencyModel:
+def fit(prefill_samples, decode_samples,
+        nonneg: bool = False) -> LinearLatencyModel:
     """prefill_samples: (b, l_i, t_prefill); decode_samples: (b, l_a, τ_d)."""
-    ap, bp, gp, dp = _ols(prefill_samples)
-    ad, bd, gd, dd = _ols(decode_samples)
+    ap, bp, gp, dp = _ols(prefill_samples, nonneg=nonneg)
+    ad, bd, gd, dd = _ols(decode_samples, nonneg=nonneg)
     return LinearLatencyModel(ap, bp, gp, dp, ad, bd, gd, dd)
 
 

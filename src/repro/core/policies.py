@@ -232,6 +232,66 @@ def with_remaining_slo(r: Request, now: float) -> Request:
     return dataclasses.replace(r, slo=new)
 
 
+# ------------------------------------------------- pending-request pricing
+def discipline_prefill_cost(view: SchedulerView,
+                            model: LinearLatencyModel, ctx: int,
+                            cached: int = 0) -> float:
+    """Time from admission to first token for a ``ctx``-token prefill
+    under the view's discipline: whole-prompt prefill, or — chunked —
+    the chunk sum plus the decode rounds for the running batch between
+    chunks.  ``cached`` tokens (an aliased prefix) are skipped entirely.
+    Shared by every pricing policy so they all charge admission the way
+    the executor will actually run it."""
+    ctx = ctx - min(max(cached, 0), ctx - 1)
+    C = getattr(view.discipline, "chunk_size", 0)
+    if C <= 0:
+        return model.prefill_time(1, ctx)
+    chunks = [min(C, ctx - i) for i in range(0, ctx, C)]
+    cost = sum(model.prefill_time(1, c) for c in chunks)
+    if view.active and len(chunks) > 1:
+        b = len(view.active)
+        cost += (len(chunks) - 1) * max(
+            model.per_token_decode_time(b, v.context_len)
+            for v in view.active)
+    return cost
+
+
+def pending_budget(view: SchedulerView, i: int) -> float:
+    """Remaining time until ``pending[i]``'s tightest *live* deadline
+    (+inf with no applicable SLO).  A re-queued preempted request
+    already emitted its first token, so its TTFT constraint is settled
+    — only its e2e deadline stays live."""
+    r = view.pending[i]
+    waited = max(0.0, view.now - submit_base(r))
+    cands = []
+    if r.slo.ttft is not None and view.pending_context_len(i) == \
+            r.input_len:
+        cands.append(r.slo.ttft - waited)
+    if r.slo.e2e is not None:
+        cands.append(r.slo.e2e - waited)
+    return min(cands) if cands else math.inf
+
+
+def pending_service(view: SchedulerView, i: int,
+                    model: LinearLatencyModel) -> float:
+    """Modelled solo service time of ``pending[i]`` if admitted now:
+    prefill under the view's discipline (cached prefix skipped) plus the
+    decode of its remaining output tokens.  Requests without an output
+    estimate price decode as free (prefill-only)."""
+    r = view.pending[i]
+    ctx = view.pending_context_len(i)
+    prefill = discipline_prefill_cost(view, model, ctx,
+                                      view.pending_cached_len(i))
+    try:
+        gen = ctx - r.input_len
+        # prefill emits one token; the rest are decode rounds
+        rem = max(int(r.planning_output_len()) - gen - 1, 0)
+        decode = model.decode_time(1, ctx, rem)
+    except ValueError:                       # no output-length estimate
+        decode = 0.0
+    return prefill + decode
+
+
 # -------------------------------------------------------------- policies
 class SchedulingPolicy:
     """v2 contract: ``decide(view) -> Decision``.
@@ -366,37 +426,15 @@ class SLOPreemptPolicy(SchedulingPolicy):
         self.margin = margin
 
     def _budget(self, view: SchedulerView, i: int) -> float:
-        """Remaining time until ``pending[i]``'s tightest live deadline."""
-        r = view.pending[i]
-        waited = max(0.0, view.now - submit_base(r))
-        cands = []
-        # a re-queued preempted request already emitted its first token:
-        # its TTFT constraint is settled, not a live deadline
-        if r.slo.ttft is not None and view.pending_context_len(i) == \
-                r.input_len:
-            cands.append(r.slo.ttft - waited)
-        if r.slo.e2e is not None:
-            cands.append(r.slo.e2e - waited)
-        return min(cands) if cands else math.inf
+        """Remaining time until ``pending[i]``'s tightest live deadline
+        (see :func:`pending_budget`)."""
+        return pending_budget(view, i)
 
     def _prefill_cost(self, view: SchedulerView, ctx: int,
                       cached: int = 0) -> float:
-        """Time from admission to first token under the view's
-        discipline: whole-prompt prefill, or — chunked — the chunk sum
-        plus the decode rounds for the running batch between chunks.
-        ``cached`` tokens (an aliased prefix) are skipped entirely."""
-        ctx = ctx - min(max(cached, 0), ctx - 1)
-        C = getattr(view.discipline, "chunk_size", 0)
-        if C <= 0:
-            return self.model.prefill_time(1, ctx)
-        chunks = [min(C, ctx - i) for i in range(0, ctx, C)]
-        cost = sum(self.model.prefill_time(1, c) for c in chunks)
-        if view.active and len(chunks) > 1:
-            b = len(view.active)
-            cost += (len(chunks) - 1) * max(
-                self.model.per_token_decode_time(b, v.context_len)
-                for v in view.active)
-        return cost
+        """Discipline-aware time-to-first-token (see
+        :func:`discipline_prefill_cost`)."""
+        return discipline_prefill_cost(view, self.model, ctx, cached)
 
     def _constraints(self, view: SchedulerView, i: int):
         """(remaining budget, modelled service time) per applicable live
@@ -529,6 +567,83 @@ class SLOPreemptPolicy(SchedulingPolicy):
         return Decision(admit=admit, preempt=preempt)
 
 
+class IndexPolicy(SchedulingPolicy):
+    """Theory-grounded priority-index admission ("Optimal Scheduling
+    Algorithms for LLM Inference", arXiv 2508.01002): each pending
+    request gets a closed-form index — no anneal — and the highest
+    indices take the free slots.  Three members of the family share the
+    machinery:
+
+    ``w`` (default — the W-index)
+        ``1 / (slack · service)`` where slack is the remaining deadline
+        budget minus the modelled service time and service is the
+        discipline-aware prefill plus remaining decode.  Urgent *and*
+        short requests dominate; the index diverges as slack → 0, so a
+        request is pulled forward exactly while pulling it forward can
+        still save it.
+    ``sjf``
+        ``1 / service`` — shortest-remaining-service first (optimal for
+        mean latency when nothing has a deadline).
+    ``edf``
+        ``-budget`` — earliest live deadline first.
+
+    Under ``w`` requests are tiered: savable deadline-bearing requests
+    (slack > 0) outrank no-deadline ones, which outrank the doomed
+    (slack ≤ 0 — serving them cannot meet anything, so they yield to
+    requests that can still be saved; within the doomed tier shortest
+    first, to shed them cheapest).  Ties break on ``req_id`` so the
+    admitted *set and order* are invariant to any permutation of the
+    pending queue.
+
+    On a paged executor the admission walk is block-aware: a request
+    whose unique new blocks exceed the remaining free blocks is skipped
+    — not a barrier — so smaller lower-index requests can still fill
+    the pool.
+    """
+
+    def __init__(self, model: LinearLatencyModel, mode: str = "w",
+                 eps: float = 1e-6):
+        if mode not in ("w", "sjf", "edf"):
+            raise ValueError(
+                f"mode must be 'w', 'sjf' or 'edf', got {mode!r}")
+        self.model = model
+        self.mode = mode
+        self.eps = eps
+
+    def _index(self, view: SchedulerView, i: int) -> Tuple[int, float]:
+        """(tier, index) of ``pending[i]`` — higher admits first."""
+        service = max(pending_service(view, i, self.model), self.eps)
+        if self.mode == "sjf":
+            return (0, 1.0 / service)
+        budget = pending_budget(view, i)
+        if self.mode == "edf":
+            return (0, -budget)
+        if budget == math.inf:
+            return (1, 1.0 / service)
+        slack = budget - service
+        if slack <= 0.0:
+            return (0, 1.0 / service)
+        return (2, 1.0 / (max(slack, self.eps) * service))
+
+    def decide(self, view):
+        def key(i):
+            tier, idx = self._index(view, i)
+            return (tier, idx, -getattr(view.pending[i], "req_id", i))
+        order = sorted(range(len(view.pending)), key=key, reverse=True)
+        avail = view.free_blocks            # None on unpaged executors
+        admit: List[int] = []
+        for i in order:
+            if len(admit) >= view.free:
+                break
+            need = view.pending_blocks(i) if avail is not None else 0
+            if avail is not None and need > avail:
+                continue
+            admit.append(i)
+            if avail is not None:
+                avail -= need
+        return Decision(admit=admit)
+
+
 # ------------------------------------------------------ v1 compatibility
 class AdmissionPolicy(SchedulingPolicy):
     """Deprecated v1 base class (admit-only, no view of the active set).
@@ -648,6 +763,85 @@ class ChunkedPrefill(ExecutionDiscipline):
         return f"ChunkedPrefill({self.chunk_size})"
 
 
+class AdaptiveChunkedPrefill(ChunkedPrefill):
+    """A :class:`ChunkedPrefill` whose ``chunk_size`` is rewritten per
+    admission decision by :class:`DynamicChunkPolicy`.  Both executors
+    re-read ``chunk_size`` at every admission, so a mutation takes
+    effect on the very next prefill."""
+
+    def __repr__(self):
+        return f"AdaptiveChunkedPrefill({self.chunk_size})"
+
+
+# ----------------------------------------------------- dynamic chunk size
+class DynamicChunkPolicy(SchedulingPolicy):
+    """SLOs-Serve-style per-admission dynamic chunk sizing (arXiv
+    2504.08784): before delegating admission to a base policy, solve for
+    the largest prefill chunk the running batch's TPOT headroom permits
+    and write it into the (shared, mutable) chunked discipline.
+
+    A chunk stalls every running decode for ``prefill_time(1, C)``, so
+    the tightest running TPOT budget bounds the chunk:
+
+        prefill_time(1, C) ≤ min_j (tpot_j − τ_d(b, ctx_j))
+        ⇒  C = (head − β_p − δ_p) / (α_p + γ_p)
+
+    clamped to ``[min_chunk, max_chunk]``.  With no TPOT-bearing request
+    running, the chunk opens to ``max_chunk`` (prefill throughput);
+    under decode pressure it shrinks toward ``min_chunk`` (tail TBT).
+
+    The policy carries its own :class:`AdaptiveChunkedPrefill` in
+    ``.discipline`` — hand that to the executor — and also rewrites any
+    *other* chunked ``view.discipline`` it is handed, so admission
+    pricing within the same decision sees the new size.  Admission is
+    delegated to ``base`` (default: the W-index policy), which prices
+    prefill under the freshly-set chunk.
+    """
+
+    def __init__(self, model: LinearLatencyModel,
+                 base: Optional[SchedulingPolicy] = None,
+                 min_chunk: int = 16, max_chunk: int = 512):
+        if not 0 < int(min_chunk) <= int(max_chunk):
+            raise ValueError("need 0 < min_chunk <= max_chunk")
+        self.model = model
+        self.base = base if base is not None else IndexPolicy(model)
+        self.min_chunk = int(min_chunk)
+        self.max_chunk = int(max_chunk)
+        self.discipline = AdaptiveChunkedPrefill(self.max_chunk)
+
+    @property
+    def preemptive(self):
+        return bool(getattr(self.base, "preemptive", False))
+
+    def reset(self):
+        self.discipline.chunk_size = self.max_chunk
+        self.base.reset()
+
+    def chunk_for(self, view: SchedulerView) -> int:
+        """Largest chunk the running batch's TPOT headroom permits."""
+        m = self.model
+        b = max(len(view.active), 1)
+        heads = [v.request.slo.tpot - m.per_token_decode_time(
+                     b, v.context_len)
+                 for v in view.active if v.request.slo.tpot is not None]
+        if not heads:
+            return self.max_chunk
+        head = min(heads) - m.beta_p - m.delta_p
+        denom = m.alpha_p + m.gamma_p
+        if denom <= 0.0:                    # flat prefill cost in length
+            return self.max_chunk if head > 0 else self.min_chunk
+        return int(min(max(head / denom, self.min_chunk), self.max_chunk))
+
+    def decide(self, view):
+        C = self.chunk_for(view)
+        self.discipline.chunk_size = C
+        disc = view.discipline
+        if disc is not None and disc is not self.discipline \
+                and getattr(disc, "chunk_size", 0) > 0:
+            disc.chunk_size = C
+        return self.base.decide(view)
+
+
 # --------------------------------------------------------------- registry
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -733,6 +927,28 @@ def _make_reanneal(model=None, max_batch=None, sa_params=None,
 def _make_preempt(model=None, margin=0.0, **_):
     return SLOPreemptPolicy(_require(model, "model=...", "slo-preempt"),
                             margin=margin)
+
+
+@register("index")
+@register("w-index")
+def _make_index(model=None, mode=None, eps=1e-6, arg=None, **_):
+    # "index:w" / "index:sjf" / "index:edf" select the family member;
+    # "w-index" is shorthand for the default W-index
+    if mode is None:
+        mode = arg if arg is not None else "w"
+    return IndexPolicy(_require(model, "model=...", "index"),
+                       mode=mode, eps=eps)
+
+
+@register("dynamic-chunk")
+def _make_dynamic_chunk(model=None, base=None, min_chunk=16,
+                        max_chunk=None, arg=None, **_):
+    # "dynamic-chunk:128" caps the chunk at 128 tokens
+    if max_chunk is None:
+        max_chunk = int(arg) if arg is not None else 512
+    return DynamicChunkPolicy(_require(model, "model=...", "dynamic-chunk"),
+                              base=base, min_chunk=min_chunk,
+                              max_chunk=max_chunk)
 
 
 @register("stall")

@@ -88,10 +88,14 @@ class LatencyProfiler:
     def ready(self) -> bool:
         return len(self.prefill_samples) >= 8 and len(self.decode_samples) >= 8
 
-    def fit(self) -> lm.LinearLatencyModel:
+    def fit(self, nonneg: bool = False) -> lm.LinearLatencyModel:
+        """``nonneg`` constrains every coefficient to be ≥ 0 — use it
+        when the model feeds a simulator clock, where an extrapolated
+        negative cost would make time run backwards."""
         if not self.ready:
             return lm.PAPER_TABLE2
-        return lm.fit(self.prefill_samples, self.decode_samples)
+        return lm.fit(self.prefill_samples, self.decode_samples,
+                      nonneg=nonneg)
 
 
 class MemoryModel:

@@ -778,6 +778,7 @@ class Engine:
             # latency model the slack projections in the views need
             model = getattr(pol, "model", None)
         saved_chunk = self.chunked_prefill
+        disc = None
         if discipline is not None:
             disc = make_discipline(discipline)
             if disc.chunk_size and self.cfg.mla is not None:
@@ -786,12 +787,18 @@ class Engine:
                     f"{disc!r} is unsupported for MLA archs; falling "
                     "back to whole-prompt (stalling) prefill")
                 self.chunked_prefill = 0
+                disc = None
             else:
                 self.chunked_prefill = disc.chunk_size
         try:
-            # the discipline this run actually executes (post MLA fallback)
-            disc = ChunkedPrefill(self.chunked_prefill) \
-                if self.chunked_prefill else StallingPrefill()
+            if disc is None:
+                # the discipline this run actually executes (post MLA
+                # fallback / engine default).  A caller-passed discipline
+                # keeps its object identity: adaptive disciplines
+                # (AdaptiveChunkedPrefill) are mutated by their policy
+                # mid-run and the loop re-reads chunk_size every step.
+                disc = ChunkedPrefill(self.chunked_prefill) \
+                    if self.chunked_prefill else StallingPrefill()
             return self._run_policy_loop(rts, pol, preemptive, model,
                                          respect_arrivals, disc)
         finally:
@@ -827,6 +834,10 @@ class Engine:
                                      and not all(self.slot_free))):
                 view = self.build_view(waiting, disc, model)
                 admit, preempt = normalize_decision(pol.decide(view), view)
+                if self.cfg.mla is None:
+                    # adaptive disciplines rewrite chunk_size inside
+                    # decide(); the prefills below run under the new size
+                    self.chunked_prefill = disc.chunk_size
                 active_rts = self.active_requests()
                 for j in preempt:
                     vict = active_rts[j]

@@ -31,7 +31,7 @@ from repro.data.synthetic import sample_serve_workload
 from repro.engine.engine import Engine
 from repro.engine.request import RuntimeRequest
 from repro.models import init_params
-from repro.serving import ServeLoop
+from repro.serving import ServeLoop, UnsupportedDisciplineError
 
 
 def _to_rts(pairs):
@@ -113,8 +113,14 @@ def main():
               "running --mode batch")
         mode = "batch"
     if mode == "stream" and not planner:
-        loop = ServeLoop(eng, args.policy, model=model,
-                         overlap=not args.no_overlap)
+        try:
+            loop = ServeLoop(eng, args.policy, model=model,
+                             overlap=not args.no_overlap)
+        except UnsupportedDisciplineError as e:
+            # e.g. dynamic-chunk carries its own chunked discipline
+            print(f"note: {e}; running --mode batch")
+            mode = "batch"
+    if mode == "stream" and not planner:
         loop.start(warm_lengths=[len(p) for _, p in pairs])
         loop.submit_trace(pairs)
         out = loop.serve()
@@ -134,6 +140,9 @@ def main():
                           respect)
     else:
         pol = make(args.policy, model=model, max_batch=args.max_batch)
+        # a policy that carries its own discipline (dynamic-chunk) wins
+        # over the flag — same convention as benchmarks/bench_goodput
+        discipline = getattr(pol, "discipline", None) or discipline
         out = eng.run_policy(rts, pol, discipline=discipline, model=model,
                              respect_arrivals=respect)
     met = sum(v["met"] for v in out.values())

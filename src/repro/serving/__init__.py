@@ -3,10 +3,10 @@ engine with arrival-timed ingestion, per-request token streams, and
 overlapped host-scheduling / device-execution.  Wall-clock TTFT / TBT /
 e2e are *measured* at the token-delivery boundary rather than modelled.
 """
-from repro.serving.loop import ServeLoop
+from repro.serving.loop import ServeLoop, UnsupportedDisciplineError
 from repro.serving.metrics import (RequestTimeline, ServingMetrics,
                                    StepGauge)
 from repro.serving.stream import TokenEvent, TokenStream
 
-__all__ = ["ServeLoop", "ServingMetrics", "RequestTimeline", "StepGauge",
-           "TokenEvent", "TokenStream"]
+__all__ = ["ServeLoop", "UnsupportedDisciplineError", "ServingMetrics",
+           "RequestTimeline", "StepGauge", "TokenEvent", "TokenStream"]

@@ -58,6 +58,17 @@ from repro.serving.metrics import (RequestTimeline, ServingMetrics,
 from repro.serving.stream import TokenStream
 
 
+class UnsupportedDisciplineError(NotImplementedError):
+    """The streaming loop runs whole-prompt prefill only: chunked
+    prefill owns its own interleaved decode rounds, which conflicts
+    with the loop's one-step overlapped dispatch.  Raised at
+    construction for a chunked ``discipline=`` argument, a
+    chunk-configured engine, or a policy that *carries* its own chunked
+    discipline (e.g. ``dynamic-chunk``) — subclassing
+    ``NotImplementedError`` keeps pre-existing callers' handlers
+    working."""
+
+
 class _Ticket:
     """One in-flight decode round: the device array of sampled ids plus
     the (slot, request, expected-index) participants recorded at
@@ -108,12 +119,19 @@ class ServeLoop:
             else getattr(self.pol, "model", None)
         self.disc = make_discipline(discipline)
         if self.disc.chunk_size:
-            raise NotImplementedError(
+            raise UnsupportedDisciplineError(
                 "ServeLoop runs whole-prompt prefill; chunked prefill "
                 "inside the streaming loop is a planned follow-up "
                 "(the engine's chunked path owns its own decode rounds)")
+        pol_disc = getattr(self.pol, "discipline", None)
+        if pol_disc is not None and getattr(pol_disc, "chunk_size", 0):
+            raise UnsupportedDisciplineError(
+                f"policy {type(self.pol).__name__} carries its own "
+                f"chunked discipline ({pol_disc!r}); the streaming loop "
+                "cannot honor it — run it via Engine.run_policy or "
+                "events.simulate instead")
         if engine.chunked_prefill:
-            raise NotImplementedError(
+            raise UnsupportedDisciplineError(
                 "ServeLoop requires an engine without chunked_prefill")
         self.overlap = overlap
         self.bucket_batches = bucket_batches and engine.paged

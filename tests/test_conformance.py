@@ -1,0 +1,227 @@
+"""Differential simulator-vs-engine conformance: every registry policy
+× discipline runs the *same seeded trace-shaped workload* through the
+event core (``events.simulate``) and the real engine
+(``Engine.run_policy``), and the two executions must tell the same
+story.  This is the trust anchor for ``benchmarks/bench_goodput.py``:
+its attainment curves come from the simulator at scales the CI engine
+cannot reach, and this suite is what pins the simulator to the metal.
+
+The engine runs on a wall clock (CPU jit timings), the simulator on the
+latency model fit from that same engine's profiler — so the contract is
+*decision and accounting parity*, not clock equality.  Documented
+tolerances:
+
+  * completion set, per-request token counts: **exact**
+  * SLO met flags at both SLO extremes (budgets ~1e6× vs ~1e-9× the
+    runtime): **exact** — extreme margins make the flags robust to any
+    plausible clock divergence
+  * preemption counts on the non-contended workload: **exact** (zero);
+    on the contended mix both executors must take the eviction path
+    (counts > 0), but counts are not compared — eviction triggers sit
+    on wall-clock thresholds
+  * finish order: per-request rank displacement ≤ 2 (the workload gives
+    every request a distinct output length, so no two requests finish
+    in the same decode round — but two *pending* requests with
+    near-tied priority indices may swap admission slots when the wall
+    clock and the modelled clock disagree by a hair, which displaces
+    the finish ranks of that adjacent pair)
+  * per-request e2e: within **6×** of the modelled value, and the run's
+    total latency within **3×** — CPU jit timings are noisy, but the
+    fitted model must stay on the engine's actual scale
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import SAParams, simulate
+from repro.core.policies import make, make_discipline
+from repro.core.profiler import LatencyProfiler
+from repro.core.slo import SLO, Request
+from repro.data.traces import sample_trace_workload
+
+#: every policy that can appear in a bench_goodput row
+POLICIES = ["fcfs", "slo-reanneal", "slo-preempt",
+            "index", "index:sjf", "index:edf", "dynamic-chunk"]
+DISCIPLINES = ["stall", "chunked:16"]
+
+N = 8
+MAX_SLOTS = 2
+VOCAB = 128
+E2E_TOL = 6.0       # per-request engine/sim e2e ratio bound
+SUM_TOL = 3.0       # whole-run total-latency ratio bound
+
+
+def _workload(seed: int = 42, slo_scale: float = 1e6):
+    """Trace-shaped offline pool: lengths/SLO kinds replayed from the
+    checked-in histograms, outputs reassigned to distinct values so no
+    two requests can finish in the same decode round (finish order is
+    then exact in both executors)."""
+    pairs = sample_trace_workload(N, VOCAB, seed=seed, rate=0.0,
+                                  max_input=48, slo_scale=slo_scale)
+    for i, (r, _) in enumerate(pairs):
+        r.output_len = 3 + (i * 3) % 16
+        r.predicted_output_len = r.output_len
+    return pairs
+
+
+def _policy(key, model):
+    # blanket context: factories ignore what they don't need.  The
+    # dynamic-chunk bounds keep its adaptive chunk inside the engine's
+    # warmed jit sizes.
+    return make(key, model=model, max_batch=MAX_SLOTS,
+                sa_params=SAParams(seed=0), min_chunk=8, max_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def rig():
+    jax = pytest.importorskip("jax")
+    from repro.engine.engine import Engine
+    from repro.models import ModelConfig, init_params
+
+    cfg = ModelConfig(name="conf-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=VOCAB, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prof = LatencyProfiler()
+    # one shared engine: jit warm-ups amortize across the whole matrix,
+    # and the prefix cache is off so sim and engine price identical
+    # prefill lengths
+    eng = Engine(cfg, params, max_slots=MAX_SLOTS, max_seq_len=128,
+                 profiler=prof, prefix_cache=False, temperature=0.0)
+    eng.run_fcfs(_rts(_workload(seed=0)))     # profiling warm-up pass
+    # nonneg: unconstrained OLS on the warm-up's noisy wall-clock
+    # samples can extrapolate to *negative* step costs, which would run
+    # the simulator clock backwards and scramble finish order
+    model = prof.fit(nonneg=True)
+    return eng, model
+
+
+def _rts(pairs):
+    from repro.engine.request import RuntimeRequest
+    return [RuntimeRequest(request=r, prompt_tokens=p,
+                           max_new_tokens=r.output_len)
+            for r, p in pairs]
+
+
+def _finish_order(per_req_e2e):
+    """req_ids by completion instant — submit/arrival is one shared
+    origin in both executors, so e2e order *is* finish order."""
+    return [rid for rid, _ in sorted(per_req_e2e.items(),
+                                     key=lambda kv: (kv[1], kv[0]))]
+
+
+@pytest.mark.parametrize("disc_key", DISCIPLINES)
+@pytest.mark.parametrize("policy_key", POLICIES)
+def test_policy_conformance(rig, policy_key, disc_key):
+    eng, model = rig
+
+    # --- simulator leg (fresh requests + fresh policy object)
+    sim_pairs = _workload()
+    sim_res = simulate([r for r, _ in sim_pairs], model, MAX_SLOTS,
+                       _policy(policy_key, model),
+                       discipline=make_discipline(disc_key),
+                       respect_arrivals=False)
+
+    # --- engine leg (identical seeded workload, its own objects)
+    eng_pairs = _workload()
+    out = eng.run_policy(_rts(eng_pairs), _policy(policy_key, model),
+                         discipline=make_discipline(disc_key),
+                         model=model)
+
+    # completion set + token counts: exact
+    assert set(out) == set(sim_res.e2e) == {r.req_id
+                                            for r, _ in eng_pairs}
+    for r, _ in eng_pairs:
+        assert len(out[r.req_id]["tokens"]) == r.output_len
+
+    # preemption counts: exact (loose budgets -> none anywhere)
+    eng_pre = sum(v["preemptions"] for v in out.values())
+    assert sim_res.n_preempted == eng_pre == 0
+
+    # met flags: exact under the huge-margin SLOs
+    assert all(sim_res.met.values())
+    assert all(v["met"] for v in out.values())
+
+    # finish order: rank displacement <= 2 (near-tied priority indices
+    # may swap an adjacent admission pair across the two clocks)
+    eng_order = _finish_order({k: v["e2e"] for k, v in out.items()})
+    sim_order = _finish_order(sim_res.e2e)
+    sim_rank = {rid: k for k, rid in enumerate(sim_order)}
+    for k, rid in enumerate(eng_order):
+        assert abs(k - sim_rank[rid]) <= 2, \
+            f"req {rid} finished #{k} on the engine but " \
+            f"#{sim_rank[rid]} in the sim ({policy_key}/{disc_key}): " \
+            f"{eng_order} vs {sim_order}"
+
+    # per-request e2e within the documented ratio tolerance
+    for rid, sim_e2e in sim_res.e2e.items():
+        ratio = out[rid]["e2e"] / sim_e2e
+        assert 1.0 / E2E_TOL < ratio < E2E_TOL, \
+            f"req {rid}: engine e2e {out[rid]['e2e']:.4f}s vs sim " \
+            f"{sim_e2e:.4f}s ({policy_key}/{disc_key})"
+    total_ratio = sum(v["e2e"] for v in out.values()) \
+        / sim_res.total_latency
+    assert 1.0 / SUM_TOL < total_ratio < SUM_TOL
+
+
+def test_met_flags_agree_at_tiny_budgets(rig):
+    """The opposite SLO extreme: budgets ~1e-9× below any achievable
+    latency — both executors must report zero attainment."""
+    eng, model = rig
+    sim_pairs = _workload(slo_scale=1e-9)
+    sim_res = simulate([r for r, _ in sim_pairs], model, MAX_SLOTS,
+                       _policy("fcfs", model), respect_arrivals=False)
+    out = eng.run_policy(_rts(_workload(slo_scale=1e-9)),
+                         _policy("fcfs", model), model=model)
+    assert not any(sim_res.met.values())
+    assert not any(v["met"] for v in out.values())
+
+
+def _contended(seed: int = 3):
+    """Tight-TTFT interactive requests *arriving* while long
+    loose-deadline jobs already hold every slot — the regime where
+    slo-preempt must evict, not just reorder admission (cf.
+    bench_online's engine rows).  In an offline everyone-pending-at-t=0
+    pool the policy would simply admit the tight requests first, so
+    arrivals are staggered and both executors run with
+    ``respect_arrivals=True``."""
+    rng = np.random.default_rng(seed)
+    pairs, t = [], 0.0
+    for i in range(9):
+        if i % 3 == 2:                      # tight interactive arrival
+            r = Request(i, "chat", int(rng.integers(8, 24)),
+                        SLO(ttft=0.005, tpot=0.05),
+                        output_len=int(rng.integers(3, 6)))
+        else:                               # long job, loose deadline:
+            # occupies a slot for dozens of decode rounds, so a tight
+            # arrival stuck behind it blows its first-token budget at
+            # any plausible clock speed unless a long job is evicted
+            r = Request(i, "code", int(rng.integers(24, 56)),
+                        SLO(e2e=30.0),
+                        output_len=int(rng.integers(40, 60)))
+        t += float(rng.exponential(0.005))
+        r.arrival_time = t
+        r.predicted_output_len = r.output_len
+        pairs.append((r, rng.integers(0, VOCAB,
+                                      r.input_len).astype(np.int32)))
+    return pairs
+
+
+def test_preemption_path_parity(rig):
+    """Both executors must take the eviction path on the contended mix
+    (counts themselves sit on wall-clock thresholds, so only the
+    path — preemptions > 0 — is asserted)."""
+    eng, model = rig
+    sim_res = simulate([r for r, _ in _contended()], model, MAX_SLOTS,
+                       _policy("slo-preempt", model),
+                       respect_arrivals=True)
+    out = eng.run_policy(_rts(_contended()),
+                         _policy("slo-preempt", model), model=model,
+                         respect_arrivals=True)
+    assert sim_res.n_preempted > 0
+    assert sum(v["preemptions"] for v in out.values()) > 0
+    # evicted requests are re-prefilled, never dropped
+    assert set(out) == set(sim_res.e2e)
+    for rid, v in out.items():
+        assert len(v["tokens"]) > 0

@@ -11,7 +11,8 @@ DOC_FILES = [ROOT / "README.md",
              ROOT / "docs" / "ARCHITECTURE.md",
              ROOT / "docs" / "annealer.md",
              ROOT / "docs" / "paged_kv.md",
-             ROOT / "docs" / "serving.md"]
+             ROOT / "docs" / "serving.md",
+             ROOT / "docs" / "evaluation.md"]
 
 
 def _python_blocks():
@@ -29,7 +30,8 @@ def _python_blocks():
 def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     for page in ("docs/ARCHITECTURE.md", "docs/annealer.md",
-                 "docs/paged_kv.md", "docs/serving.md"):
+                 "docs/paged_kv.md", "docs/serving.md",
+                 "docs/evaluation.md"):
         assert page in readme, f"README does not link {page}"
         assert (ROOT / page).exists(), f"{page} missing"
 

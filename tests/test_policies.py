@@ -317,6 +317,130 @@ def test_core_stamps_submit_time_on_its_clock():
     assert sim.ttft[0] == pytest.approx(0.5)  # arrival-relative
 
 
+# =================================== properties (index-policy family)
+# hypothesis is optional (pyproject's dev extra): when installed it
+# drives these properties over a wide random search; when absent the
+# SAME checks run over a fixed seeded sweep instead of skipping, so the
+# invariants stay enforced on minimal installs.
+import dataclasses
+
+from repro.core import IndexPolicy
+from repro.core.policies import normalize_decision
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+def _seeded_property(fn):
+    if _HAVE_HYPOTHESIS:
+        return settings(max_examples=60, deadline=None)(
+            given(seed=st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(40))(fn)
+
+
+def _rand_view(rng, paged=False):
+    """A random but well-formed SchedulerView: mixed SLO kinds (e2e /
+    ttft+tpot / none), some re-queued pending entries, a partly full
+    batch, and optionally paged-pool state."""
+    n = int(rng.integers(1, 9))
+    pending = []
+    for i in range(n):
+        coin = rng.random()
+        if coin < 0.4:
+            slo = SLO(e2e=float(rng.uniform(0.2, 60.0)))
+        elif coin < 0.8:
+            slo = SLO(ttft=float(rng.uniform(0.02, 10.0)),
+                      tpot=float(rng.uniform(0.01, 0.5)))
+        else:
+            slo = SLO()                       # no deadline -> tier 1
+        r = Request(i, "chat", int(rng.integers(1, 300)), slo,
+                    output_len=int(rng.integers(1, 200)))
+        r.predicted_output_len = r.output_len
+        r.submit_time = 0.0
+        pending.append(r)
+    gen = tuple(int(rng.integers(0, 4)) if rng.random() < 0.25 else 0
+                for _ in range(n))
+    now = float(rng.uniform(0.0, 5.0))
+    max_batch = int(rng.integers(1, 7))
+    na = int(rng.integers(0, max_batch + 1))
+    active = []
+    for j in range(na):
+        r = Request(1000 + j, "chat", int(rng.integers(1, 200)),
+                    SLO(e2e=float(rng.uniform(1.0, 120.0))),
+                    output_len=int(rng.integers(2, 100)))
+        g = int(rng.integers(1, r.output_len))
+        active.append(make_active_view(
+            r, g, r.output_len - g, r.input_len + g, now,
+            float(rng.uniform(0.0, now)) if rng.random() < 0.8 else None,
+            0.0, max(na, 1), PAPER_TABLE2))
+    kw = {}
+    if paged:
+        kw = dict(free_blocks=int(rng.integers(0, 48)), total_blocks=64,
+                  block_size=int(rng.integers(1, 33)),
+                  pages_per_slot=int(rng.integers(1, 9)))
+    return SchedulerView(pending=tuple(pending), active=tuple(active),
+                         now=now, free=max_batch - na,
+                         max_batch=max_batch, pending_generated=gen, **kw)
+
+
+@_seeded_property
+def test_index_admission_is_permutation_invariant(seed):
+    """Which requests an IndexPolicy admits (and in what order) depends
+    only on the request set — never on the order the executor happens
+    to list the queue in (ties break on req_id)."""
+    rng = np.random.default_rng(seed)
+    view = _rand_view(rng, paged=bool(rng.random() < 0.5))
+    mode = ("w", "sjf", "edf")[int(rng.integers(0, 3))]
+    pol = IndexPolicy(PAPER_TABLE2, mode=mode)
+    base = [view.pending[i].req_id for i in pol.decide(view).admit]
+    perm = rng.permutation(len(view.pending))
+    shuffled = dataclasses.replace(
+        view,
+        pending=tuple(view.pending[j] for j in perm),
+        pending_generated=tuple(view.pending_generated[j] for j in perm))
+    got = [shuffled.pending[i].req_id
+           for i in pol.decide(shuffled).admit]
+    assert got == base
+
+
+@_seeded_property
+def test_index_paged_admission_never_exceeds_free_blocks(seed):
+    """On a paged view the admitted set fits the block pool as priced by
+    the view's own pending_blocks (and never exceeds free slots)."""
+    rng = np.random.default_rng(seed)
+    view = _rand_view(rng, paged=True)
+    mode = ("w", "sjf", "edf")[int(rng.integers(0, 3))]
+    pol = IndexPolicy(PAPER_TABLE2, mode=mode)
+    admit, _ = normalize_decision(pol.decide(view), view)
+    assert len(admit) <= max(view.free, 0)
+    assert sum(view.pending_blocks(i) for i in admit) <= view.free_blocks
+
+
+@_seeded_property
+def test_normalize_decision_is_idempotent(seed):
+    """Sanitizing a sanitized decision is a fixed point: dedup,
+    bounds-checks, and the reverse-sorted preempt order all survive a
+    second pass unchanged."""
+    rng = np.random.default_rng(seed)
+    view = _rand_view(rng, paged=bool(rng.random() < 0.5))
+    raw = Decision(
+        admit=[int(rng.integers(-4, len(view.pending) + 4))
+               for _ in range(int(rng.integers(0, 12)))],
+        preempt=[int(rng.integers(-4, len(view.active) + 4))
+                 for _ in range(int(rng.integers(0, 8)))])
+    a1, p1 = normalize_decision(raw, view)
+    a2, p2 = normalize_decision(Decision(admit=a1, preempt=p1), view)
+    assert (a2, p2) == (a1, p1)
+    assert len(set(a1)) == len(a1) and len(set(p1)) == len(p1)
+    assert all(0 <= j < len(view.pending) for j in a1)
+    assert all(0 <= j < len(view.active) for j in p1)
+    assert p1 == sorted(p1, reverse=True)
+
+
 # ===================================================== engine (JAX) side
 jax = pytest.importorskip("jax")
 

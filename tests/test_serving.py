@@ -12,7 +12,8 @@ from repro.core.slo import SLO, Request
 from repro.data.synthetic import sample_serve_workload
 from repro.engine.engine import Engine
 from repro.models import ModelConfig, init_params
-from repro.serving import ServeLoop, ServingMetrics, TokenStream
+from repro.serving import (ServeLoop, ServingMetrics, TokenStream,
+                           UnsupportedDisciplineError)
 
 CFG = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
@@ -176,6 +177,21 @@ def test_chunked_discipline_rejected(params):
     eng = _engine(params)
     with pytest.raises(NotImplementedError):
         ServeLoop(eng, "fcfs", discipline="chunked:16")
+    # the typed subclass is what actually flies (and is catchable alone)
+    with pytest.raises(UnsupportedDisciplineError):
+        ServeLoop(_engine(params), "fcfs", discipline="chunked:16")
+    with pytest.raises(UnsupportedDisciplineError):
+        ServeLoop(_engine(params, chunked_prefill=16), "fcfs")
+
+
+def test_dynamic_chunk_policy_rejected_with_typed_error(params):
+    """dynamic-chunk carries its own AdaptiveChunkedPrefill: the loop
+    must refuse it at construction — loudly, not by silently running
+    whole-prompt prefill under a policy that believes it is chunking."""
+    from repro.core import PAPER_TABLE2
+    eng = _engine(params)
+    with pytest.raises(UnsupportedDisciplineError, match="dynamic|chunk"):
+        ServeLoop(eng, "dynamic-chunk", model=PAPER_TABLE2)
 
 
 def test_stream_iteration_from_other_thread(params):

@@ -1,0 +1,173 @@
+"""Trace-replay workload layer: checked-in profile integrity, histogram
+round-trips, arrival-process calibration, the shared
+``(Request, prompt_tokens)`` convention, and the seeded-determinism
+regression that guards ``benchmarks/bench_goodput.py``'s artifact
+contract (same seed + trace ⇒ byte-identical results across runs)."""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER_TABLE2, simulate
+from repro.core.policies import make
+from repro.data.traces import (ARRIVAL_PROCESSES, BUILTIN_TRACES,
+                               TRACES_DIR, LengthHistogram, TraceProfile,
+                               load_trace_profile, make_arrivals,
+                               sample_trace, sample_trace_workload)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------------ checked-in traces
+@pytest.mark.parametrize("name", BUILTIN_TRACES)
+def test_builtin_profile_loads_and_is_tagged(name):
+    prof = load_trace_profile(name)
+    assert prof.name == name
+    assert prof.task_type in ("code", "chat")
+    # every paper dataset carries at least one SLO dimension + its source
+    assert any(v is not None
+               for v in (prof.slo.ttft, prof.slo.tpot, prof.slo.e2e))
+    assert prof.source.startswith("hf:")
+    # the JSON on disk round-trips exactly through to_json/from_json
+    with open(TRACES_DIR / f"{name}.json") as f:
+        raw = json.load(f)
+    assert TraceProfile.from_json(prof.to_json()) == prof
+    assert TraceProfile.from_json(raw) == prof
+
+
+def test_unknown_profile_is_a_clear_error():
+    with pytest.raises(FileNotFoundError, match="built-ins"):
+        load_trace_profile("no-such-trace")
+
+
+# -------------------------------------------------------------- histogram
+def test_histogram_sampling_stays_in_support():
+    rng = np.random.default_rng(0)
+    h = LengthHistogram.from_samples(rng.lognormal(5.0, 0.8, 5000))
+    vals = h.sample(np.random.default_rng(1), 2000)
+    assert vals.min() >= 1
+    assert h.edges[0] - 1 <= vals.min() <= vals.max() <= h.edges[-1]
+    # the distilled histogram reproduces the source's median to ~25 %
+    assert 0.75 < np.median(vals) / np.exp(5.0) < 1.25
+
+
+def test_histogram_validation():
+    with pytest.raises(ValueError):
+        LengthHistogram(edges=(1.0, 2.0), counts=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        LengthHistogram(edges=(2.0, 1.0, 3.0), counts=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        LengthHistogram(edges=(1.0, 2.0, 3.0), counts=(0.0, 0.0))
+
+
+# --------------------------------------------------------------- arrivals
+@pytest.mark.parametrize("process", sorted(ARRIVAL_PROCESSES))
+def test_arrivals_calibrated_to_mean_rate(process):
+    """All three processes are mean-rate calibrated, so attainment
+    curves are load-comparable across them."""
+    kw = {"period": 10.0} if process == "diurnal" else {}
+    t = make_arrivals(4000, 50.0, process, seed=7, **kw)
+    assert (np.diff(t) >= 0).all()
+    assert t.min() >= 0
+    rate = len(t) / t[-1]
+    assert 0.85 * 50.0 < rate < 1.15 * 50.0
+    assert np.array_equal(t, make_arrivals(4000, 50.0, process,
+                                           seed=7, **kw))
+
+
+def test_bursty_is_burstier_than_poisson():
+    gp = np.diff(make_arrivals(4000, 50.0, "poisson", seed=3))
+    gb = np.diff(make_arrivals(4000, 50.0, "bursty", seed=3))
+    cv = lambda g: np.std(g) / np.mean(g)           # noqa: E731
+    assert cv(gb) > cv(gp)
+
+
+def test_zero_rate_means_everyone_at_t0():
+    assert make_arrivals(16, 0.0, "poisson").max() == 0.0
+
+
+# ------------------------------------------------------- trace generators
+def test_sample_trace_is_seed_deterministic():
+    a = sample_trace(64, rate=20.0, seed=11)
+    b = sample_trace(64, rate=20.0, seed=11)
+    for ra, rb in zip(a, b):
+        assert (ra.req_id, ra.task_type, ra.input_len, ra.output_len,
+                ra.arrival_time, ra.slo) == \
+               (rb.req_id, rb.task_type, rb.input_len, rb.output_len,
+                rb.arrival_time, rb.slo)
+    c = sample_trace(64, rate=20.0, seed=12)
+    assert any(ra.input_len != rc.input_len for ra, rc in zip(a, c))
+
+
+def test_workload_twin_shares_the_request_stream():
+    """sample_trace_workload replays the exact request stream of
+    sample_trace at the same seed; tokens are a separate stream."""
+    reqs = sample_trace(32, rate=5.0, seed=4, max_input=48)
+    pairs = sample_trace_workload(32, 128, rate=5.0, seed=4, max_input=48)
+    for r, (rw, toks) in zip(reqs, pairs):
+        assert (r.req_id, r.input_len, r.output_len, r.arrival_time) == \
+               (rw.req_id, rw.input_len, rw.output_len, rw.arrival_time)
+        assert len(toks) == r.input_len
+        assert toks.dtype == np.int32 and 0 <= toks.min() \
+            and toks.max() < 128
+
+
+def test_length_clipping_and_slo_scaling():
+    reqs = sample_trace(64, seed=2, max_input=48, max_output=16,
+                        slo_scale=0.5)
+    assert max(r.input_len for r in reqs) <= 48
+    assert max(r.output_len for r in reqs) <= 16
+    base = {p: load_trace_profile(p).slo for p in BUILTIN_TRACES}
+    for r in reqs:
+        ref = next(s for s in base.values()
+                   if (s.e2e is None) == (r.slo.e2e is None))
+        for k in ("ttft", "tpot", "e2e"):
+            b, got = getattr(ref, k), getattr(r.slo, k)
+            assert (b is None) == (got is None)
+            if b is not None:
+                assert got == pytest.approx(b * 0.5)
+
+
+def test_bad_mix_rejected():
+    with pytest.raises(ValueError):
+        sample_trace(8, mix=[1.0])          # one weight, two profiles
+    with pytest.raises(ValueError):
+        sample_trace(8, mix=[0.0, 0.0])
+
+
+# --------------------------------------------- seeded-determinism (bench)
+def _sim_once():
+    reqs = sample_trace(200, rate=30.0, seed=9)
+    for r in reqs:
+        r.predicted_output_len = r.output_len
+    pol = make("index", model=PAPER_TABLE2)
+    return simulate(reqs, PAPER_TABLE2, 8, pol, respect_arrivals=True)
+
+
+def test_simresult_is_byte_identical_across_runs():
+    """Same seed + trace ⇒ byte-identical SimResult: repr equality is
+    deliberate — any float drifting by 1 ulp fails."""
+    a, b = _sim_once(), _sim_once()
+    assert repr(a) == repr(b)
+    assert a.e2e == b.e2e and a.ttft == b.ttft and a.met == b.met
+
+
+def test_bench_goodput_rows_are_byte_identical_across_runs():
+    """The artifact contract of benchmarks/bench_goodput.py: everything
+    except the wall-clock us_per_call column is a pure function of the
+    seed (BENCH_goodput.json and the attainment CSV diff clean)."""
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.bench_goodput import sweep
+    finally:
+        sys.path.pop(0)
+    out = []
+    for _ in range(2):
+        rows, payload, curve = sweep(
+            configs=("qwen2.5-7b",), policies=("fcfs", "index"),
+            loads=(0.8,), n=120)
+        out.append((json.dumps(payload, sort_keys=True), curve,
+                    [[r[0], r[2]] for r in rows]))   # drop us_per_call
+    assert out[0] == out[1]
