@@ -46,10 +46,11 @@ from repro.core.profiler import (LatencyProfiler, MemoryModel,
 from repro.core.policies import (ActiveView, AdaptiveChunkedPrefill,
                                  AdmissionPolicy, ChunkedPrefill, Decision,
                                  DynamicChunkPolicy, ExecutionDiscipline,
-                                 FCFSPolicy, IndexPolicy, PlannedPolicy,
-                                 SchedulerView, SchedulingPolicy,
-                                 SLOPreemptPolicy, SLOReannealPolicy,
-                                 StallingPrefill, as_scheduling_policy,
+                                 FCFSPolicy, IndexPolicy, PlanItem,
+                                 PlannedPolicy, SchedulerView,
+                                 SchedulingPolicy, SLOPreemptPolicy,
+                                 SLOReannealPolicy, StallingPrefill,
+                                 StepPlan, as_scheduling_policy,
                                  make, make_discipline)
 from repro.core.scheduler import (InstanceQueue, ScheduleOutcome,
                                   SLOAwareScheduler)
@@ -72,7 +73,7 @@ __all__ = [
     "FCFSPolicy", "PlannedPolicy", "SLOReannealPolicy", "SLOPreemptPolicy",
     "IndexPolicy", "DynamicChunkPolicy",
     "ExecutionDiscipline", "StallingPrefill", "ChunkedPrefill",
-    "AdaptiveChunkedPrefill",
+    "AdaptiveChunkedPrefill", "PlanItem", "StepPlan",
     "make", "make_discipline", "as_scheduling_policy",
     # v1 deprecation shim
     "AdmissionPolicy",

@@ -23,12 +23,15 @@ scheduling abstractions from :mod:`repro.core.policies`:
     ``PlannedPolicy``, ``SLOReannealPolicy``, ``SLOPreemptPolicy``.  The
     *same* policy objects drive the real engine (``Engine.run_policy``),
     so simulated and measured runs share one scheduling brain.
-  * :class:`~repro.core.policies.ExecutionDiscipline` — how admitted
-    prefills interleave with decode rounds: ``StallingPrefill`` (batched
-    whole-prompt prefill, running decodes stall) or
-    ``ChunkedPrefill(chunk_size)`` (slot-by-slot Sarathi-style chunking;
-    running decodes advance one round between chunks, mirroring the
-    engine's chunked path).
+  * :class:`~repro.core.policies.ExecutionDiscipline` — emits each
+    tick's :class:`~repro.core.policies.StepPlan`: one prefill span per
+    staged (mid-prefill) request plus one decode item per active
+    request.  ``StallingPrefill`` completes each prefill in one batched
+    tick (running decodes stall behind it); ``ChunkedPrefill(n)``
+    advances every staged prefill one chunk per tick, sharing the tick
+    with the running decode round — the same plan/execute cycle
+    ``Engine.execute_step`` runs, so simulated and real chunk timelines
+    line up tick for tick.
 
 The v1 ``AdmissionPolicy.select`` protocol still works through a
 deprecation shim (see :mod:`repro.core.policies`); new code should
@@ -39,8 +42,11 @@ Execution semantics (engine-faithful — the fix for the historical drift):
   * prefill of an admitted set under ``StallingPrefill`` is batched: it
     completes at ``clock + max(member prefill times)``; that instant is
     TTFT *and* the first generated token (``gen = 1``); under
-    ``ChunkedPrefill`` each admitted request prefills slot-by-slot in
-    chunks, with one decode round for the running batch between chunks;
+    ``ChunkedPrefill`` every staged request advances one chunk per tick
+    (chunks priced back-to-back within the tick) and activates on its
+    final chunk *before* that tick's decode round, so its first decode
+    token rides the same tick; mid-prefill requests hold a slot but are
+    excluded from decode rounds and the policies' active view;
   * each decode round generates one token for every active request and
     costs the max per-token decode time over the active set; a request
     finishes once ``gen == l_o`` — i.e. ``l_o - 1`` decode rounds after
@@ -120,11 +126,16 @@ def _noise(rng: Optional[np.random.Generator], sigma: float) -> float:
 
 # ------------------------------------------------------------------- core
 class _Instance:
-    __slots__ = ("clock", "active", "dispatched")
+    __slots__ = ("clock", "active", "prefilling", "dispatched")
 
     def __init__(self, clock: float = 0.0):
         self.clock = clock
         self.active: List[dict] = []
+        # staged prefills advancing tick-by-tick under the step plan:
+        # {"req", "done", "total", "gen0", "ttft0"} — the sim analog of
+        # the engine's PREFILLING slots (they hold capacity but are
+        # invisible to decode rounds and the policies' active view)
+        self.prefilling: List[dict] = []
         self.dispatched = False
 
 
@@ -162,6 +173,12 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
                                      max_batch=max_batch,
                                      sa_params=sa_params,
                                      min_queue=reanneal_min_queue)
+    if discipline is None:
+        # a policy that carries its own discipline (dynamic-chunk's
+        # AdaptiveChunkedPrefill) executes under it — same convention
+        # as Engine.run_policy, and object identity is preserved so
+        # the policy's per-tick retuning reaches the planner
+        discipline = getattr(pol, "discipline", None)
     disc = make_discipline(discipline)
     res = SimResult({}, {}, {}, {})
 
@@ -228,42 +245,78 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
         else:
             inst.active.append(a)
 
-    def run_prefill(inst: _Instance, admitted: List[Request]):
-        """Execute the admitted set's prefill under the discipline."""
-        if disc.chunk_size <= 0:
-            # batched whole-prompt prefill; running decodes stall.
-            # Prefill computes the unique span only (cached prefix
-            # aliased) — but decode, below, attends the full context.
-            b = len(admitted)
-            lens = [r.input_len - cp_of(r)
-                    + carry.get(r.req_id, {}).get("gen", 0)
-                    for r in admitted]
-            inst.clock += max(model.prefill_time(b, ln)
-                              * _noise(rng, noise_sigma) for ln in lens)
-            for r in admitted:
-                st = carry.pop(r.req_id, None)
-                activate(inst, r, st["gen"] if st else 0,
-                         st["ttft"] if st else None)
-            return
-        # chunked: slot-by-slot, one decode round between chunks (the
-        # engine's Sarathi-style path)
+    def stage_prefill(inst: _Instance, admitted: List[Request]):
+        """Stage the admitted set: each request joins the instance's
+        prefilling list (claiming its capacity); the per-tick step plan
+        below advances and eventually activates it.  The compute span
+        is the unique suffix only (cached prefix aliased), plus any
+        preemption-carried tokens (vLLM-style KV recompute)."""
         for r in admitted:
             st = carry.pop(r.req_id, None)
             gen0 = st["gen"] if st else 0
-            plen = r.input_len - cp_of(r) + gen0
-            done = 0
-            while done < plen:
-                c = min(disc.chunk_size, plen - done)
-                inst.clock += model.prefill_time(1, c) \
-                    * _noise(rng, noise_sigma)
-                done += c
-                if done < plen:
-                    decode_round(inst)       # running decodes advance
-            activate(inst, r, gen0, st["ttft"] if st else None)
+            inst.prefilling.append({
+                "req": r, "done": 0,
+                "total": r.input_len - cp_of(r) + gen0,
+                "gen0": gen0, "ttft0": st["ttft"] if st else None})
+
+    def run_plan(inst: _Instance):
+        """Execute one tick's :class:`StepPlan` — the sim twin of
+        ``Engine.execute_step``: advance every planned prefill span,
+        activate completed prefills, then one decode round over the
+        active set (freshly activated requests ride the same tick)."""
+        plan = disc.plan_step(
+            [(k, p["done"], p["total"])
+             for k, p in enumerate(inst.prefilling)],
+            range(len(inst.active)))
+        pre = plan.prefills
+        if pre:
+            if disc.chunk_size <= 0:
+                # batched whole-prompt prefill: one tick, priced at the
+                # max member time; running decodes stall behind it
+                inst.clock += max(
+                    model.prefill_time(len(pre), it.length)
+                    * _noise(rng, noise_sigma) for it in pre)
+            else:
+                # chunks execute back-to-back within the tick, exactly
+                # as the engine's execute_step runs its prefill items
+                inst.clock += sum(
+                    model.prefill_time(1, it.length)
+                    * _noise(rng, noise_sigma) for it in pre)
+            done_items = []
+            for it in pre:
+                p = inst.prefilling[it.ref]
+                p["done"] += it.length
+                if it.last:
+                    done_items.append(p)
+            for p in done_items:
+                inst.prefilling.remove(p)
+                activate(inst, p["req"], p["gen0"], p["ttft0"])
+        decode_round(inst)
+        return bool(pre)
+
+    def make_view(inst: _Instance, idx: int,
+                  pend: Sequence[Request]) -> SchedulerView:
+        b = max(len(inst.active), 1)
+        return SchedulerView(
+            pending=tuple(pend),
+            active=tuple(make_active_view(
+                a["req"], a["gen"], a["remaining"], a["accum"],
+                inst.clock, a["ttft"], arr_of(a["req"]), b, model)
+                for a in inst.active),
+            now=inst.clock,
+            # slots mid-prefill hold capacity: they are neither free
+            # nor active (exactly the engine's PREFILLING accounting)
+            free=max_batch - len(inst.active) - len(inst.prefilling),
+            max_batch=max_batch, instance_id=idx,
+            pending_generated=tuple(
+                carry.get(r.req_id, {}).get("gen", 0) for r in pend),
+            discipline=disc,
+            pending_cached=tuple(cp_of(r) for r in pend))
 
     while True:
         work_left = pending or fi < len(future)
-        runnable = [i for i in insts if i.active or work_left]
+        runnable = [i for i in insts
+                    if i.active or i.prefilling or work_left]
         if not runnable:
             break
         inst = min(runnable, key=lambda i: i.clock)
@@ -275,25 +328,14 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
             pending.append(r)
             fi += 1
         progressed = False
-        free = max_batch - len(inst.active)
+        decided = False
+        free = max_batch - len(inst.active) - len(inst.prefilling)
         # scheduling event: the policy sees pending AND active state;
         # consulted with no free slot only if it can preempt
         if pending and (free > 0 or (preemptive and inst.active)):
-            b = max(len(inst.active), 1)
-            view = SchedulerView(
-                pending=tuple(pending),
-                active=tuple(make_active_view(
-                    a["req"], a["gen"], a["remaining"], a["accum"],
-                    inst.clock, a["ttft"], arr_of(a["req"]), b, model)
-                    for a in inst.active),
-                now=inst.clock, free=free, max_batch=max_batch,
-                instance_id=idx,
-                pending_generated=tuple(
-                    carry.get(r.req_id, {}).get("gen", 0)
-                    for r in pending),
-                discipline=disc,
-                pending_cached=tuple(cp_of(r) for r in pending))
+            view = make_view(inst, idx, pending)
             admit, preempt = normalize_decision(pol.decide(view), view)
+            decided = True
             # preemption: evict, discard KV, requeue (indices into
             # view.pending stay valid — preempted go to the tail)
             for j in preempt:
@@ -303,20 +345,28 @@ def simulate(requests: Sequence[Request], model: LinearLatencyModel,
                 res.preemptions[rid] = res.preemptions.get(rid, 0) + 1
                 pending.append(a["req"])
                 progressed = True
-            free = max_batch - len(inst.active)
+            free = max_batch - len(inst.active) - len(inst.prefilling)
             sel = admit[:free]
             if sel:
                 admitted = [pending[j] for j in sel]
                 for j in sorted(sel, reverse=True):
                     pending.pop(j)
-                if inter_batch_gap and inst.dispatched and not inst.active:
+                if inter_batch_gap and inst.dispatched \
+                        and not inst.active and not inst.prefilling:
                     inst.clock += inter_batch_gap
-                run_prefill(inst, admitted)
+                stage_prefill(inst, admitted)
                 inst.dispatched = True
                 progressed = True
-        # one decode round over the active set
-        if inst.active:
-            decode_round(inst)
+        retune = getattr(pol, "retune", None)
+        if not decided and retune is not None \
+                and (inst.active or inst.prefilling):
+            # decide() didn't run this tick (empty queue): let an
+            # adaptive policy keep resizing its chunk against the
+            # current active set, as the engine loop does
+            retune(make_view(inst, idx, ()))
+        # one plan tick: prefill spans + a decode round (chunk-as-tick)
+        if inst.active or inst.prefilling:
+            run_plan(inst)
             progressed = True
         if not progressed:
             if fi < len(future):                  # idle until next arrival

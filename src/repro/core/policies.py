@@ -24,8 +24,14 @@ serving engine (``repro.engine.engine.Engine.run_policy``):
     governs how admitted prefills interleave with running decode rounds:
     :class:`StallingPrefill` (whole-prompt prefill, running decodes
     stall) vs :class:`ChunkedPrefill` (the prompt is processed in
-    ``chunk_size`` chunks with one decode round for the running batch
-    between chunks — Sarathi-style).
+    ``chunk_size`` chunks, one chunk per tick — Sarathi-style).  Each
+    scheduling tick the discipline emits a :class:`StepPlan` — a mixed
+    batch of :class:`PlanItem` work units (``prefill-chunk(slot,
+    span)`` / ``full-prefill(slot)`` / ``decode(slot)``) — through
+    :meth:`ExecutionDiscipline.plan_step`, and every executor (the
+    event core, ``Engine.run_policy``, the streaming ``ServeLoop``)
+    runs exactly one plan per tick, so a prefill chunk rides in the
+    same tick as the running decodes instead of stalling them.
 
 Policies and disciplines are constructible by string key through the
 registry (:func:`make`), e.g. ``make("slo-preempt", model=m)``,
@@ -166,6 +172,57 @@ class Decision:
     discarded; the request returns to pending and is re-prefilled)."""
     admit: List[int] = dataclasses.field(default_factory=list)
     preempt: List[int] = dataclasses.field(default_factory=list)
+
+
+# ------------------------------------------------------------ step plans
+@dataclasses.dataclass(frozen=True)
+class PlanItem:
+    """One unit of work inside a :class:`StepPlan`.
+
+    ``kind`` is ``"prefill"`` (compute ``length`` context tokens of
+    ``ref``'s staged prefill, starting at position ``start``) or
+    ``"decode"`` (one decode token for ``ref``).  ``ref`` is whatever
+    the executor uses to name in-flight work — a slot id for the
+    engine/serving loop, an index into the prefilling list for the
+    event core.  ``last`` marks the chunk that completes a prefill:
+    the request activates this tick and joins the same tick's decode
+    round (its first token samples from this chunk's logits)."""
+    kind: str
+    ref: int
+    start: int = 0
+    length: int = 0
+    last: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """One tick's mixed batch of work items, as emitted by
+    :meth:`ExecutionDiscipline.plan_step`.  Executors run the prefill
+    items first (each is one timed jit call / one priced model term),
+    then a single decode round over every running request — including
+    any whose ``last`` chunk just completed."""
+    items: Tuple[PlanItem, ...] = ()
+
+    @property
+    def prefills(self) -> Tuple[PlanItem, ...]:
+        return tuple(it for it in self.items if it.kind == "prefill")
+
+    @property
+    def decodes(self) -> Tuple[PlanItem, ...]:
+        return tuple(it for it in self.items if it.kind == "decode")
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(it.length for it in self.items if it.kind == "prefill")
+
+    @property
+    def mixed(self) -> bool:
+        """True when prefill work and running decodes share this tick —
+        the stall-free batch shape chunked disciplines exist for."""
+        return bool(self.prefills) and bool(self.decodes)
+
+    def __bool__(self):
+        return bool(self.items)
 
 
 def compute_slack(request: Request, *, generated: int, remaining: int,
@@ -736,12 +793,42 @@ class ExecutionDiscipline:
     """How admitted prefills interleave with running decode rounds.
 
     ``chunk_size == 0`` means whole-prompt prefill (running decodes
-    stall); ``chunk_size > 0`` means Sarathi-style chunking: the prompt
-    is processed ``chunk_size`` tokens at a time with one decode round
-    for the running batch between chunks.  The same objects configure
-    both the event core and the engine."""
+    stall for the full span); ``chunk_size > 0`` means Sarathi-style
+    chunking: each in-flight prefill advances one ``chunk_size`` chunk
+    per tick, sharing the tick with the running batch's decode round.
+    The same objects configure the event core, ``Engine.run_policy``
+    and the streaming ``ServeLoop`` — all three drive the one
+    plan/execute cycle through :meth:`plan_step`."""
 
     chunk_size: int = 0
+
+    def plan_step(self, prefills: Sequence[Tuple[int, int, int]],
+                  decodes: Sequence[int] = ()) -> StepPlan:
+        """Emit one tick's :class:`StepPlan`.
+
+        ``prefills`` is the in-flight prefill state as ``(ref, done,
+        total)`` triples — ``done`` context tokens already computed of
+        ``total`` (an aliased cached prefix counts as done).
+        ``decodes`` is the refs of the running requests.  A stalling
+        discipline emits the whole remaining span per prefill; a
+        chunked one emits at most ``chunk_size`` tokens per prefill per
+        tick (``chunk_size`` is re-read every call, so an adaptive
+        discipline retuned mid-run takes effect on the next tick).
+        Decode items always ride in the same plan: the executor runs
+        one decode round after the prefill items, which is what makes
+        the batch stall-free."""
+        C = self.chunk_size
+        items = []
+        for ref, done, total in prefills:
+            rem = int(total) - int(done)
+            if rem <= 0:
+                continue
+            span = rem if C <= 0 else min(int(C), rem)
+            items.append(PlanItem("prefill", int(ref), int(done), span,
+                                  last=span >= rem))
+        for ref in decodes:
+            items.append(PlanItem("decode", int(ref), 0, 1))
+        return StepPlan(tuple(items))
 
     def __repr__(self):
         return f"{type(self).__name__}()"
@@ -832,13 +919,23 @@ class DynamicChunkPolicy(SchedulingPolicy):
             return self.max_chunk if head > 0 else self.min_chunk
         return int(min(max(head / denom, self.min_chunk), self.max_chunk))
 
-    def decide(self, view):
+    def retune(self, view: SchedulerView) -> int:
+        """Re-solve the chunk size for the *current* running batch and
+        write it into the adaptive discipline(s).  Executors call this
+        every tick where no admission decision runs (``decide`` retunes
+        on its own), so the chunk tracks the batch's TPOT headroom
+        tick-by-tick — opening up as tight requests drain, shrinking
+        as they pile in — not just at admission instants."""
         C = self.chunk_for(view)
         self.discipline.chunk_size = C
         disc = view.discipline
         if disc is not None and disc is not self.discipline \
                 and getattr(disc, "chunk_size", 0) > 0:
             disc.chunk_size = C
+        return C
+
+    def decide(self, view):
+        self.retune(view)
         return self.base.decide(view)
 
 

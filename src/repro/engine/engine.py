@@ -25,9 +25,18 @@ that drive the discrete-event core — builds a :class:`SchedulerView` of
 the pending and running sets each step, and honors admit *and* preempt
 decisions (evicted requests lose their KV and are re-prefilled over
 prompt + generated tokens).  ``run_fcfs`` / ``run_planned`` /
-``run_priority`` are thin wrappers over it, and an
-:class:`ExecutionDiscipline` (``StallingPrefill`` / ``ChunkedPrefill``)
-selects whole-prompt vs Sarathi-style chunked prefill per run.
+``run_priority`` are thin wrappers over it.
+
+Execution is plan-driven (chunk-as-tick): each round the active
+:class:`ExecutionDiscipline` emits a :class:`StepPlan` — one prefill
+span per slot mid-prefill (``Phase.PREFILLING``, staged by
+``begin_prefill``) plus one decode item per running slot — and
+``execute_step`` advances the prefill spans then runs a single decode
+round, so under ``ChunkedPrefill(n)`` a long prompt's chunks ride the
+same ticks as the running decodes (Sarathi-style mixed batches) while
+``StallingPrefill`` completes each prefill in one tick.  ``run_policy``,
+the discrete-event core and the streaming ``ServeLoop`` are all thin
+drivers of this one plan/execute cycle.
 
 Every prefill/decode step is timed and fed to the ``LatencyProfiler`` so
 the paper's linear latency model can be fit from *this* engine's behaviour
@@ -48,8 +57,9 @@ from repro.core.latency_model import LinearLatencyModel
 from repro.core.policies import (ChunkedPrefill, ExecutionDiscipline,
                                  FCFSPolicy, PlannedPolicy, SchedulerView,
                                  SchedulingPolicy, StallingPrefill,
-                                 make_active_view, make_discipline,
-                                 normalize_decision, resolve_policy)
+                                 StepPlan, make_active_view,
+                                 make_discipline, normalize_decision,
+                                 resolve_policy)
 from repro.core.profiler import LatencyProfiler
 from repro.core.slo import meets_slo
 from repro.engine.blocks import BlockPool
@@ -149,6 +159,9 @@ class Engine:
             self._prefill_fn = jax.jit(self._prefill_one)  # per bucket
             self._chunk_fn = jax.jit(self._prefill_chunk)
         self.chunked_prefill = 0 if cfg.mla is not None else chunked_prefill
+        # dense-mode in-progress prefills: slot -> private single-slot
+        # cache, committed to the pool when the final chunk completes
+        self._partial: Dict[int, object] = {}
         self._warm = set()
         self.cow_copies = 0          # copy-on-write page splits performed
         # fused decode+sample dispatch path (serving loop): one jit, one
@@ -458,7 +471,10 @@ class Engine:
         for slot, rt in enumerate(self.slot_req):
             if rt is None:
                 continue
-            pos = rt.input_len + len(rt.generated) - 1
+            # a slot mid-prefill writes at its chunk frontier, not at
+            # the last-generated position
+            pos = rt.prefill_pos if rt.phase is Phase.PREFILLING \
+                else rt.input_len + len(rt.generated) - 1
             blocks = self._slot_blocks[slot]
             for d in range(lookahead + 1):
                 bi = ((pos + d) % self.slot_len) // self.block_size
@@ -489,162 +505,146 @@ class Engine:
         return np.concatenate([np.asarray(rt.prompt_tokens, np.int32),
                                np.asarray(rt.generated, np.int32)])
 
-    def prefill_chunked(self, rt: RuntimeRequest, slot: int):
-        """Chunked prefill: process the prompt in chunks, running a decode
-        round for the other active slots between chunks.  In paged mode
-        every chunk is written in place into the slot's pages."""
-        C = self.chunked_prefill
+    def begin_prefill(self, rt: RuntimeRequest, slot: int):
+        """Claim ``slot`` for ``rt`` and stage its prefill — blocks are
+        assigned (paged; the cached-prefix span is aliased and skipped)
+        and the request enters ``Phase.PREFILLING``, but no compute
+        runs.  :meth:`prefill_step` then advances the staged span,
+        possibly across several ticks (chunk-as-tick): mid-prefill the
+        slot is occupied but the request is invisible to decode rounds
+        and to the policies' active view."""
         ctx = self._context_tokens(rt)
         n = len(ctx)
         if n >= self.max_seq_len:
             raise ValueError(f"prefill context {n} >= max_seq_len")
-        cached = 0
-        if self.paged:
-            self._assign_blocks(rt, slot)
-            cached = rt.cached_tokens
-            # aliased prefix pages are already populated: start the
-            # chunk walk mid-sequence, skipping the cached span
-            self.cache["pos"] = self.cache["pos"].at[slot].set(cached)
-            cache1 = None
-        else:
-            from repro.models.cache import init_cache as _ic
-            cache1 = _ic(self.cfg, 1, self.max_seq_len)
-        logits = None
-        i = cached
-        while i < n:
-            chunk = ctx[i: i + C]
-            toks = jnp.asarray(np.asarray(chunk, np.int32)[None])
-            m = len(chunk)
-            # warm the jit cache per chunk size so first-seen compile
-            # time never pollutes the engine clock / profiler samples
-            if ("chunk", m) not in self._warm:
-                if self.paged:
-                    self._warm_paged(self._chunk_fn, toks, slot, m)
-                else:
-                    self._chunk_fn(self.params, cache1,
-                                   toks)[0].block_until_ready()
-                self._warm.add(("chunk", m))
-            t0 = time.perf_counter()
-            if self.paged:
-                logits, self.cache = self._chunk_fn(self.params, self.cache,
-                                                    toks, slot, m)
-            else:
-                logits, cache1 = self._chunk_fn(self.params, cache1, toks)
-            logits.block_until_ready()
-            dt = time.perf_counter() - t0
-            self.clock += dt
-            if self.profiler is not None:
-                # chunk continuations are prefill work: feed them to the
-                # latency-model fit like whole-prompt prefills
-                self.profiler.observe_prefill(1, m, dt)
-            i += m
-            if i < n:
-                self.decode_round()     # running slots keep decoding
-        if not self.paged:
-            self._write_slot(slot, cache1)
+        # block assignment is deferred to the first prefill_step: a
+        # prefill completing earlier in the same tick indexes its span,
+        # and the assignment-time re-probe then aliases this prompt's
+        # cached prefix (the admission reservation in rt.block_ids
+        # keeps the pages safe meanwhile)
+        rt.prefill_pos = 0
+        rt.phase = Phase.PREFILLING
+        rt.slot = slot
         self.slot_free[slot] = False
         self.slot_req[slot] = rt
-        rt.phase = Phase.RUNNING
-        rt.slot = slot
-        self._index_span(rt, n)
-        if rt.ttft_time is None:            # preserved across preemptions
-            rt.ttft_time = self.clock
-        self.key, sk = jax.random.split(self.key)
-        tok = int(sample(logits[:, 0], sk, self.temperature)[0])
-        self._push_token(rt, tok)
 
-    def prefill(self, rt: RuntimeRequest, slot: int):
-        if self.chunked_prefill:
-            return self.prefill_chunked(rt, slot)
+    def prefill_step(self, rt: RuntimeRequest,
+                     length: Optional[int] = None) -> bool:
+        """Advance ``rt``'s staged prefill by ``length`` context tokens
+        (the whole remaining span when None) — one timed jit call, one
+        profiler sample.  The final span samples the first output token
+        (its logits sit at the true last context position) and flips
+        the request to RUNNING, so it joins the same tick's decode
+        round.  Returns True when the prefill completed."""
+        if rt.phase is not Phase.PREFILLING:
+            raise ValueError(f"request {rt.req_id} has no staged prefill")
+        slot = rt.slot
+        if self.paged and not self._slot_blocks[slot]:
+            # first step: claim the pages (aliasing any prefix indexed
+            # since admission) and skip the cached span — its aliased
+            # pages are already populated, so the compute starts
+            # mid-sequence
+            self._assign_blocks(rt, slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                rt.cached_tokens)
+            rt.prefill_pos = rt.cached_tokens
         ctx = self._context_tokens(rt)
         n = len(ctx)
-        if n >= self.max_seq_len:
-            raise ValueError(f"prompt length {n} >= max_seq_len")
-        # SSM/hybrid states are sequence-order sensitive: pad tokens after
-        # the prompt would pollute the recurrent state, so those archs
-        # prefill at exact length (one compile per distinct length).
-        if self.paged:
-            self._assign_blocks(rt, slot)
-            if rt.cached_tokens:
-                # aliased prefix pages hold positions [0, cached): only
-                # the unique suffix is computed (zero prefill FLOPs for
-                # the shared span)
-                return self._prefill_suffix(rt, slot, ctx,
-                                            rt.cached_tokens)
-        L = n if self.cfg.ssm_layers else _bucket(n)
-        toks = np.zeros((1, L), np.int32)
-        toks[0, :n] = ctx
-        # warm the jit cache for this bucket so compile time never
-        # pollutes the engine clock / profiler samples
-        if ("prefill", L) not in self._warm:
+        done = rt.prefill_pos
+        m = n - done if length is None else min(int(length), n - done)
+        if m <= 0:
+            raise ValueError(f"empty prefill span for request {rt.req_id}")
+        last = done + m >= n
+        whole = done == 0 and last
+        cache1 = None
+        if whole:
+            # whole-context fast path: the bucketed prefill jit.  SSM/
+            # hybrid states are sequence-order sensitive, so those archs
+            # prefill at exact length (one compile per distinct length).
+            L = n if self.cfg.ssm_layers else _bucket(n)
+            toks = np.zeros((1, L), np.int32)
+            toks[0, :n] = ctx
+            toks = jnp.asarray(toks)
+            # warm the jit cache per bucket so first-seen compile time
+            # never pollutes the engine clock / profiler samples
+            if ("prefill", L) not in self._warm:
+                if self.paged:
+                    self._warm_paged(self._prefill_fn, toks, n, slot)
+                else:
+                    self._prefill_fn(self.params, toks,
+                                     n)[0].block_until_ready()
+                self._warm.add(("prefill", L))
+            t0 = time.perf_counter()
             if self.paged:
-                self._warm_paged(self._prefill_fn, jnp.asarray(toks), n,
-                                 slot)
+                logits, self.cache = self._prefill_fn(
+                    self.params, self.cache, toks, n, slot)
             else:
-                self._prefill_fn(self.params, jnp.asarray(toks),
-                                 n)[0].block_until_ready()
-            self._warm.add(("prefill", L))
-        t0 = time.perf_counter()
-        if self.paged:
-            logits, self.cache = self._prefill_fn(self.params, self.cache,
-                                                  jnp.asarray(toks), n, slot)
+                logits, cache1 = self._prefill_fn(self.params, toks, n)
+            row = logits[None, :]
+        elif self.paged:
+            # chunk/suffix continuation against the paged pool: padded
+            # to a pow-2 bucket with a traced valid length (padded rows
+            # route to the null page and are causally masked), so a
+            # ragged final chunk reuses the compiled bucket
+            L = _bucket(m)
+            toks = np.zeros((1, L), np.int32)
+            toks[0, :m] = ctx[done:done + m]
+            toks = jnp.asarray(toks)
+            if ("chunk", L) not in self._warm:
+                self._warm_paged(self._chunk_fn, toks, slot, m)
+                self._warm.add(("chunk", L))
+            t0 = time.perf_counter()
+            logits, self.cache = self._chunk_fn(self.params, self.cache,
+                                                toks, slot, m)
+            row = logits[:, 0]
         else:
-            logits, cache1 = self._prefill_fn(self.params, jnp.asarray(toks),
-                                              n)
-        logits.block_until_ready()
+            # dense chunk walk over a private single-slot cache (exact
+            # length: SSM recurrent state tolerates no pad tokens);
+            # committed to the pool only at completion
+            if slot not in self._partial:
+                self._partial[slot] = init_cache(self.cfg, 1,
+                                                 self.max_seq_len)
+            cache1 = self._partial[slot]
+            toks = jnp.asarray(np.asarray(ctx[done:done + m],
+                                          np.int32)[None])
+            if ("chunk", m) not in self._warm:
+                self._chunk_fn(self.params, cache1,
+                               toks)[0].block_until_ready()
+                self._warm.add(("chunk", m))
+            t0 = time.perf_counter()
+            logits, cache1 = self._chunk_fn(self.params, cache1, toks)
+            self._partial[slot] = cache1
+            row = logits[:, 0]
+        row.block_until_ready()
         dt = time.perf_counter() - t0
         self.clock += dt
         if self.profiler is not None:
-            self.profiler.observe_prefill(1, n, dt)
-        if not self.paged:
-            self._write_slot(slot, cache1)
-        self.slot_free[slot] = False
-        self.slot_req[slot] = rt
-        rt.phase = Phase.RUNNING
-        rt.slot = slot
-        self._index_span(rt, n)
-        if rt.ttft_time is None:            # preserved across preemptions
-            rt.ttft_time = self.clock
-        self.key, sk = jax.random.split(self.key)
-        tok = int(sample(logits[None, :], sk, self.temperature)[0])
-        self._push_token(rt, tok)
-
-    def _prefill_suffix(self, rt: RuntimeRequest, slot: int,
-                        ctx: np.ndarray, cached: int):
-        """Prefill only the unique suffix ``ctx[cached:]`` of a prompt
-        whose first ``cached`` positions alias index pages: the slot's
-        ``pos`` is preset to ``cached`` and one padded chunk call runs
-        mid-sequence (padded rows route to the null page and are
-        causally masked)."""
-        n = len(ctx)
-        m = n - cached
-        L = _bucket(m)
-        toks = np.zeros((1, L), np.int32)
-        toks[0, :m] = ctx[cached:]
-        toks = jnp.asarray(toks)
-        self.cache["pos"] = self.cache["pos"].at[slot].set(cached)
-        if ("chunk", L) not in self._warm:
-            self._warm_paged(self._chunk_fn, toks, slot, m)
-            self._warm.add(("chunk", L))
-        t0 = time.perf_counter()
-        logits, self.cache = self._chunk_fn(self.params, self.cache,
-                                            toks, slot, m)
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.clock += dt
-        if self.profiler is not None:
-            # only the computed suffix is prefill work
+            # chunk continuations are prefill work: feed them to the
+            # latency-model fit like whole-prompt prefills
             self.profiler.observe_prefill(1, m, dt)
-        self.slot_free[slot] = False
-        self.slot_req[slot] = rt
+        rt.prefill_pos = done + m
+        if not last:
+            return False
+        if not self.paged:
+            self._write_slot(slot, cache1 if whole
+                             else self._partial.pop(slot))
         rt.phase = Phase.RUNNING
-        rt.slot = slot
         self._index_span(rt, n)
         if rt.ttft_time is None:            # preserved across preemptions
             rt.ttft_time = self.clock
         self.key, sk = jax.random.split(self.key)
-        tok = int(sample(logits[:, 0], sk, self.temperature)[0])
+        tok = int(sample(row, sk, self.temperature)[0])
         self._push_token(rt, tok)
+        return True
+
+    def prefill(self, rt: RuntimeRequest, slot: int):
+        """Whole-prompt prefill: stage the slot and compute the full
+        remaining context in one step (any cached prefix aliased).  The
+        plan-driven executors instead call :meth:`begin_prefill` once
+        and :meth:`prefill_step` per tick, as the discipline's
+        :class:`~repro.core.policies.StepPlan` dictates."""
+        self.begin_prefill(rt, slot)
+        self.prefill_step(rt)
 
     def preempt(self, rt: RuntimeRequest):
         """Evict a running request: free its slot and discard its KV
@@ -654,11 +654,13 @@ class Engine:
         prefill)."""
         if rt.slot < 0 or self.slot_req[rt.slot] is not rt:
             raise ValueError(f"request {rt.req_id} is not running")
+        self._partial.pop(rt.slot, None)     # drop any half-built cache
         self._release_blocks(rt.slot)
         self.slot_free[rt.slot] = True
         self.slot_req[rt.slot] = None
         rt.slot = -1
         rt.phase = Phase.WAITING
+        rt.prefill_pos = 0
         rt.preemptions += 1
 
     def _push_token(self, rt: RuntimeRequest, tok: int):
@@ -670,19 +672,27 @@ class Engine:
             self.finish_slot(rt)
 
     def decode_round(self):
-        """One decode iteration over every active slot."""
-        active_np = np.array([not f for f in self.slot_free])
+        """One decode iteration over every RUNNING slot.  Slots mid-
+        prefill (``Phase.PREFILLING``) are masked out of the batch: in
+        paged mode the unmasked page write lands one garbage token at
+        their frontier position, which the next prefill chunk overwrites
+        before anything reads it (per-slot pos/SSM state *is* frozen by
+        the mask)."""
+        running = [rt for rt in self.slot_req
+                   if rt is not None and rt.phase is Phase.RUNNING]
+        active_np = np.array([rt is not None and rt.phase is Phase.RUNNING
+                              for rt in self.slot_req])
         if not active_np.any():
             return
         if self.paged:
             self._cow_guard()
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i, rt in enumerate(self.slot_req):
-            if rt is not None:
+            if rt is not None and rt.phase is Phase.RUNNING:
                 tokens[i, 0] = rt.generated[-1]
         b = int(active_np.sum())
         accum = int(np.max([rt.input_len + len(rt.generated)
-                            for rt in self.slot_req if rt is not None]))
+                            for rt in running]))
         if "decode" not in self._warm:
             if self.paged:
                 self._warm_paged(self._decode_fn, jnp.asarray(tokens),
@@ -703,15 +713,47 @@ class Engine:
         self.key, sk = jax.random.split(self.key)
         toks = np.asarray(sample(logits, sk, self.temperature))
         for i, rt in enumerate(list(self.slot_req)):
-            if rt is not None:
+            if rt is not None and rt.phase is Phase.RUNNING:
                 self._push_token(rt, int(toks[i]))
+
+    # ------------------------------------------------------- step planner
+    def plan_step(self, disc: ExecutionDiscipline) -> StepPlan:
+        """Build this tick's :class:`StepPlan` from the slot state: one
+        prefill item per PREFILLING slot (span sized by the discipline's
+        chunk size; ``ref`` is the slot id) and one decode item per
+        RUNNING slot."""
+        prefills, decodes = [], []
+        for slot, rt in enumerate(self.slot_req):
+            if rt is None:
+                continue
+            if rt.phase is Phase.PREFILLING:
+                prefills.append((slot, rt.prefill_pos,
+                                 rt.input_len + len(rt.generated)))
+            elif rt.phase is Phase.RUNNING:
+                decodes.append(slot)
+        return disc.plan_step(prefills, decodes)
+
+    def execute_step(self, plan: StepPlan):
+        """Execute one mixed tick: advance every planned prefill span,
+        then run a single decode round over the RUNNING slots — a
+        request whose final chunk just completed is activated before
+        the round, so its first decode token rides in the same tick
+        (chunk-as-tick)."""
+        for it in plan.prefills:
+            rt = self.slot_req[it.ref]
+            if rt is not None and rt.phase is Phase.PREFILLING:
+                self.prefill_step(rt, it.length)
+        self.decode_round()
 
     # ------------------------------------------------------------ views
     def active_requests(self) -> List[RuntimeRequest]:
-        """Running requests in slot order — the ordering every
+        """RUNNING requests in slot order — the ordering every
         :class:`SchedulerView` built from this engine uses for its
-        ``active`` tuple (so ``Decision.preempt`` indices resolve)."""
-        return [rt for rt in self.slot_req if rt is not None]
+        ``active`` tuple (so ``Decision.preempt`` indices resolve).
+        Slots mid-prefill are excluded: they hold no sampled token yet
+        and cannot be decoded or preempted."""
+        return [rt for rt in self.slot_req
+                if rt is not None and rt.phase is Phase.RUNNING]
 
     def build_view(self, waiting: Sequence[RuntimeRequest],
                    disc: Optional[ExecutionDiscipline],
@@ -766,10 +808,16 @@ class Engine:
         requests; evicted requests lose their KV and are re-prefilled on
         re-admission (prompt + generated tokens).  ``discipline``
         overrides the engine's prefill mode for this run
-        (``StallingPrefill`` / ``ChunkedPrefill(n)`` / registry key).
-        ``respect_arrivals=True`` releases each request into the waiting
-        queue only once ``Request.arrival_time`` (relative to the run
-        start) has passed on the engine clock.
+        (``StallingPrefill`` / ``ChunkedPrefill(n)`` / registry key);
+        when omitted, a policy that carries its own discipline
+        (dynamic-chunk's ``AdaptiveChunkedPrefill``) runs under it, else
+        the engine's ``chunked_prefill`` default applies.  The chosen
+        discipline drives the per-tick :class:`StepPlan` — engine config
+        is never mutated, so a policy that raises mid-run cannot leave
+        the engine reconfigured.  ``respect_arrivals=True`` releases
+        each request into the waiting queue only once
+        ``Request.arrival_time`` (relative to the run start) has passed
+        on the engine clock.
         """
         pol, preemptive = resolve_policy(policy, model=model,
                                          max_batch=self.max_slots)
@@ -777,32 +825,26 @@ class Engine:
             # model-driven policies (slo-reanneal, slo-preempt) carry the
             # latency model the slack projections in the views need
             model = getattr(pol, "model", None)
-        saved_chunk = self.chunked_prefill
-        disc = None
+        if discipline is None:
+            # adopt the policy's own discipline: adaptive disciplines
+            # (AdaptiveChunkedPrefill) are mutated by their policy
+            # mid-run and the planner re-reads chunk_size every tick,
+            # so object identity matters (make_discipline passes
+            # instances through untouched)
+            discipline = getattr(pol, "discipline", None)
         if discipline is not None:
             disc = make_discipline(discipline)
-            if disc.chunk_size and self.cfg.mla is not None:
-                # MLA archs have no chunked path (see __init__)
-                warnings.warn(
-                    f"{disc!r} is unsupported for MLA archs; falling "
-                    "back to whole-prompt (stalling) prefill")
-                self.chunked_prefill = 0
-                disc = None
-            else:
-                self.chunked_prefill = disc.chunk_size
-        try:
-            if disc is None:
-                # the discipline this run actually executes (post MLA
-                # fallback / engine default).  A caller-passed discipline
-                # keeps its object identity: adaptive disciplines
-                # (AdaptiveChunkedPrefill) are mutated by their policy
-                # mid-run and the loop re-reads chunk_size every step.
-                disc = ChunkedPrefill(self.chunked_prefill) \
-                    if self.chunked_prefill else StallingPrefill()
-            return self._run_policy_loop(rts, pol, preemptive, model,
-                                         respect_arrivals, disc)
-        finally:
-            self.chunked_prefill = saved_chunk
+        else:
+            disc = ChunkedPrefill(self.chunked_prefill) \
+                if self.chunked_prefill else StallingPrefill()
+        if disc.chunk_size and self.cfg.mla is not None:
+            # MLA archs have no chunked path (see __init__)
+            warnings.warn(
+                f"{disc!r} is unsupported for MLA archs; falling "
+                "back to whole-prompt (stalling) prefill")
+            disc = StallingPrefill()
+        return self._run_policy_loop(rts, pol, preemptive, model,
+                                     respect_arrivals, disc)
 
     def _run_policy_loop(self, rts, pol, preemptive, model,
                          respect_arrivals, disc):
@@ -818,8 +860,12 @@ class Engine:
                 rt.request.submit_time = self.clock
         fi = 0
         while waiting or fi < len(future) or not all(self.slot_free):
+            # compare on t0 + arrival (not arrival <= clock - t0): the
+            # idle-wait below advances the clock to exactly t0 + arrival,
+            # and (t0 + a) - t0 can round *below* a, which would leave
+            # the request unpulled and the clock pinned — a livelock
             while fi < len(future) and \
-                    future[fi].request.arrival_time <= self.clock - t0:
+                    t0 + future[fi].request.arrival_time <= self.clock:
                 rt = future[fi]
                 # the true arrival instant (<= self.clock): queueing delay
                 # accrued while the engine was mid-step must count toward
@@ -830,14 +876,14 @@ class Engine:
                 fi += 1
             free = self.free_slots()
             admitted = False
+            decided = False
             if waiting and (free or (preemptive
                                      and not all(self.slot_free))):
                 view = self.build_view(waiting, disc, model)
+                # adaptive disciplines rewrite chunk_size inside
+                # decide(); this tick's plan runs under the new size
                 admit, preempt = normalize_decision(pol.decide(view), view)
-                if self.cfg.mla is None:
-                    # adaptive disciplines rewrite chunk_size inside
-                    # decide(); the prefills below run under the new size
-                    self.chunked_prefill = disc.chunk_size
+                decided = True
                 active_rts = self.active_requests()
                 for j in preempt:
                     vict = active_rts[j]
@@ -863,10 +909,19 @@ class Engine:
                 for j in sorted(sel, reverse=True):
                     waiting.pop(j)
                 for rt, slot in zip(chosen, free):
-                    self.prefill(rt, slot)
+                    # stage only: the prefill advances through the tick
+                    # plans below, chunked or whole per the discipline
+                    self.begin_prefill(rt, slot)
                 admitted = admitted or bool(chosen)
+            retune = getattr(pol, "retune", None)
+            if not decided and retune is not None \
+                    and not all(self.slot_free):
+                # decide() didn't run this tick (empty queue): let an
+                # adaptive policy keep resizing its chunk against the
+                # current active set, as the event core does
+                retune(self.build_view([], disc, model))
             idle = all(self.slot_free)
-            self.decode_round()
+            self.execute_step(self.plan_step(disc))
             if idle and not admitted:
                 if fi < len(future):
                     # idle-wait for the next arrival on the engine clock

@@ -14,6 +14,10 @@ class Phase(enum.Enum):
     WAITING = 0
     RUNNING = 1
     FINISHED = 2
+    # holds a slot and KV blocks, but its prefill is still advancing
+    # chunk-by-chunk across ticks (no sampled token yet) — excluded
+    # from decode rounds and from the policies' active view
+    PREFILLING = 3
 
 
 @dataclasses.dataclass
@@ -35,6 +39,9 @@ class RuntimeRequest:
     # block reservation made at admission, consumed by the next prefill
     # (engine-internal; None outside the admit -> prefill window)
     block_ids: Optional[List[int]] = None
+    # context positions already computed of an in-progress prefill
+    # (starts at the cached-prefix length; meaningful while PREFILLING)
+    prefill_pos: int = 0
 
     @property
     def req_id(self) -> int:

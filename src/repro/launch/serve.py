@@ -13,7 +13,9 @@ wall-clock streams, overlapped host scheduling + device execution — and
 reports *measured* TTFT/TBT/attainment; ``--mode batch`` runs the
 engine's batch admission loop on its internal clock instead (the
 planner policies always use batch mode: their plan needs the whole
-workload up front).
+workload up front).  ``--discipline chunked:<n>`` and
+``--policy dynamic-chunk`` stream natively: prefill chunks ride the
+serving ticks alongside running decode dispatches (chunk-as-tick).
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ from repro.data.synthetic import sample_serve_workload
 from repro.engine.engine import Engine
 from repro.engine.request import RuntimeRequest
 from repro.models import init_params
-from repro.serving import ServeLoop, UnsupportedDisciplineError
+from repro.serving import ServeLoop
 
 
 def _to_rts(pairs):
@@ -82,7 +84,9 @@ def main():
                     help="stream: live ServeLoop with measured wall-clock "
                          "metrics; batch: engine admission loop")
     ap.add_argument("--discipline", default="stall",
-                    help="stall | chunked | chunked:<size> (batch mode)")
+                    help="stall | chunked | chunked:<size> — both modes; "
+                         "streaming runs chunks in the tick plan "
+                         "alongside decode dispatches")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests/s; 0 = all submitted at t=0")
     ap.add_argument("--max-batch", type=int, default=4)
@@ -106,27 +110,23 @@ def main():
     eng = Engine(cfg, params, max_slots=args.max_batch, max_seq_len=256)
     planner = args.policy in ("slo", "planned")
     mode = args.mode
-    if mode == "stream" and discipline.chunk_size:
-        # the streaming loop runs whole-prompt prefill only (see
-        # docs/serving.md); chunked disciplines use the batch loop
-        print(f"note: {discipline!r} is unsupported in stream mode; "
-              "running --mode batch")
-        mode = "batch"
     if mode == "stream" and not planner:
-        try:
-            loop = ServeLoop(eng, args.policy, model=model,
-                             overlap=not args.no_overlap)
-        except UnsupportedDisciplineError as e:
-            # e.g. dynamic-chunk carries its own chunked discipline
-            print(f"note: {e}; running --mode batch")
-            mode = "batch"
-    if mode == "stream" and not planner:
+        pol = make(args.policy, model=model, max_batch=args.max_batch)
+        # a policy that carries its own discipline (dynamic-chunk) wins
+        # over the flag — same convention as the batch path below.
+        # Chunked disciplines stream natively (chunk-as-tick); only
+        # MLA + chunked raises UnsupportedDisciplineError, which is a
+        # real configuration error the user must fix.
+        loop = ServeLoop(eng, pol, model=model,
+                         discipline=getattr(pol, "discipline", None)
+                         or discipline,
+                         overlap=not args.no_overlap)
         loop.start(warm_lengths=[len(p) for _, p in pairs])
         loop.submit_trace(pairs)
         out = loop.serve()
         s = loop.metrics.summary()
         print(f"policy={args.policy} mode=stream arch={cfg.name} "
-              f"overlap={not args.no_overlap} "
+              f"discipline={loop.disc!r} overlap={not args.no_overlap} "
               f"G={s['G']:.4f} attainment={s['attainment']:.2f} "
               f"ttft_mean={s['ttft_mean'] * 1e3:.1f}ms "
               f"tbt_p90={s['tbt_p90'] * 1e3:.2f}ms "

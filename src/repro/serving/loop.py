@@ -31,6 +31,13 @@ with execution and latency is charged on the engine's step-time clock.
   covering every active slot, so arrival jitter changes the compiled
   shape only at bucket boundaries (at most ``log2(max_slots)``
   compilations, pre-warmed in ``start()``).
+* **Chunk-as-tick prefill** — every tick executes the active
+  :class:`~repro.core.policies.ExecutionDiscipline`'s ``StepPlan``:
+  staged admissions (``Engine.begin_prefill``) advance chunk-by-chunk
+  under ``ChunkedPrefill(n)`` / ``dynamic-chunk`` while the running
+  decode round dispatches in the same tick, so a long prompt no longer
+  stalls streaming TBT for its whole prefill.  ``StallingPrefill``
+  (default) completes each prefill within its admission tick.
 
 The scheduling brain is unchanged: the same v2
 :class:`~repro.core.policies.SchedulingPolicy` objects drive admission
@@ -48,8 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.latency_model import LinearLatencyModel
-from repro.core.policies import (make_discipline, normalize_decision,
-                                 resolve_policy)
+from repro.core.policies import (ChunkedPrefill, make_discipline,
+                                 normalize_decision, resolve_policy)
 from repro.core.slo import SLO, Request
 from repro.engine.engine import Engine, _bucket
 from repro.engine.request import Phase, RuntimeRequest
@@ -59,12 +66,12 @@ from repro.serving.stream import TokenStream
 
 
 class UnsupportedDisciplineError(NotImplementedError):
-    """The streaming loop runs whole-prompt prefill only: chunked
-    prefill owns its own interleaved decode rounds, which conflicts
-    with the loop's one-step overlapped dispatch.  Raised at
-    construction for a chunked ``discipline=`` argument, a
-    chunk-configured engine, or a policy that *carries* its own chunked
-    discipline (e.g. ``dynamic-chunk``) — subclassing
+    """The requested discipline cannot run on this engine.  Since the
+    step-planner refactor the streaming loop executes chunked and
+    adaptive disciplines natively (prefill chunks ride the tick plan
+    alongside decode dispatches), so this is raised only for the one
+    genuinely unsupported combination: chunked prefill on an MLA arch,
+    which has no chunked forward path.  Subclassing
     ``NotImplementedError`` keeps pre-existing callers' handlers
     working."""
 
@@ -98,6 +105,13 @@ class ServeLoop:
     model:
         Latency model for slack/budget projections (policies that carry
         their own are used as fallback).
+    discipline:
+        :class:`~repro.core.policies.ExecutionDiscipline` or registry
+        key (``"stall"``, ``"chunked:32"``).  Default resolution
+        matches ``Engine.run_policy``: the policy's own discipline
+        (``dynamic-chunk``), else the engine's ``chunked_prefill``
+        setting, else stalling whole-prompt prefill.  Chunked on an MLA
+        arch raises :class:`UnsupportedDisciplineError`.
     overlap:
         Dispatch round ``N+1`` before syncing round ``N`` (one-step
         lookahead).  ``False`` = synchronous reference mode: identical
@@ -117,22 +131,20 @@ class ServeLoop:
             policy, model=model, max_batch=engine.max_slots)
         self.model = model if model is not None \
             else getattr(self.pol, "model", None)
+        if discipline is None:
+            # same resolution as Engine.run_policy: a policy carrying
+            # its own discipline (dynamic-chunk) wins, then the
+            # engine's chunked_prefill default — object identity is
+            # preserved so adaptive retuning reaches the tick planner
+            discipline = getattr(self.pol, "discipline", None)
+        if discipline is None and engine.chunked_prefill:
+            discipline = ChunkedPrefill(engine.chunked_prefill)
         self.disc = make_discipline(discipline)
-        if self.disc.chunk_size:
+        if self.disc.chunk_size and engine.cfg.mla is not None:
             raise UnsupportedDisciplineError(
-                "ServeLoop runs whole-prompt prefill; chunked prefill "
-                "inside the streaming loop is a planned follow-up "
-                "(the engine's chunked path owns its own decode rounds)")
-        pol_disc = getattr(self.pol, "discipline", None)
-        if pol_disc is not None and getattr(pol_disc, "chunk_size", 0):
-            raise UnsupportedDisciplineError(
-                f"policy {type(self.pol).__name__} carries its own "
-                f"chunked discipline ({pol_disc!r}); the streaming loop "
-                "cannot honor it — run it via Engine.run_policy or "
-                "events.simulate instead")
-        if engine.chunked_prefill:
-            raise UnsupportedDisciplineError(
-                "ServeLoop requires an engine without chunked_prefill")
+                f"{self.disc!r} is unsupported for MLA archs (no "
+                "chunked forward path); use whole-prompt (stalling) "
+                "prefill")
         self.overlap = overlap
         self.bucket_batches = bucket_batches and engine.paged
         self.metrics = metrics if metrics is not None else ServingMetrics()
@@ -188,6 +200,20 @@ class ServeLoop:
             else:
                 eng._prefill_fn(eng.params, toks, n)[0].block_until_ready()
             eng._warm.add(("prefill", n))
+        # chunked disciplines: pre-warm the chunk buckets a plan can hit
+        # (every pow-2 bucket up to the largest chunk, so ragged final
+        # chunks are covered too).  Adaptive policies may retune up to
+        # their max_chunk.
+        C = self.disc.chunk_size
+        if C and eng.paged:
+            hi = _bucket(max(C, getattr(self.pol, "max_chunk", C)))
+            L = 16
+            while L <= hi and L < eng.max_seq_len:
+                if ("chunk", L) not in eng._warm:
+                    toks = jnp.zeros((1, L), jnp.int32)
+                    eng._warm_paged(eng._chunk_fn, toks, 0, L)
+                    eng._warm.add(("chunk", L))
+                L *= 2
         self._t0 = time.perf_counter()
         return self
 
@@ -276,16 +302,27 @@ class ServeLoop:
             self._waiting.append(rt)
 
     # -------------------------------------------------------- scheduling
+    def _retune(self):
+        """Let an adaptive policy resize its chunk against the current
+        active set on ticks where ``decide()`` doesn't run (empty
+        queue) — same hook as the batch loop and the event core."""
+        fn = getattr(self.pol, "retune", None)
+        if fn is not None and not all(self.eng.slot_free):
+            fn(self.eng.build_view([], self.disc, self.model))
+
     def _schedule(self):
         """One policy decision over the live view: preempt, then reserve
-        blocks and prefill admissions.  Prefill is synchronous (it
-        produces the first token and the wall TTFT stamp); its jit chains
-        after any in-flight decode round, so device order stays valid."""
+        blocks and *stage* admissions (``begin_prefill``).  The staged
+        prefills advance through the tick plan in :meth:`tick` — whole-
+        prompt in one tick under stall, chunk-by-chunk alongside decode
+        dispatches under a chunked discipline."""
         eng = self.eng
         if not self._waiting:
+            self._retune()
             return False
         free = eng.free_slots()
         if not free and not (self.preemptive and not all(eng.slot_free)):
+            self._retune()
             return False
         view = eng.build_view(self._waiting, self.disc, self.model)
         admit, preempt = normalize_decision(self.pol.decide(view), view)
@@ -314,8 +351,8 @@ class ServeLoop:
         for j in sorted(sel, reverse=True):
             self._waiting.pop(j)
         for rt, slot in zip(chosen, free):
-            eng.prefill(rt, slot)
-            self._after_prefill(rt)
+            # stage only: the prefill runs via this tick's plan below
+            eng.begin_prefill(rt, slot)
             did = True
         return did
 
@@ -416,13 +453,37 @@ class ServeLoop:
             inbox = len(self._inbox)
         return inbox == 0 and not self._future and self._idle()
 
+    def _run_prefill_plan(self) -> int:
+        """Advance every staged prefill by its planned span (the
+        streaming half of ``Engine.execute_step`` — decode runs through
+        the overlapped dispatch path instead).  The prefill jits chain
+        after any in-flight decode round, so device order stays valid;
+        a completing span delivers the first token and seeds the
+        dispatch feed.  Returns prompt tokens computed this tick."""
+        eng = self.eng
+        plan = eng.plan_step(self.disc)
+        done = 0
+        for it in plan.prefills:
+            rt = eng.slot_req[it.ref]
+            if rt is None or rt.phase is not Phase.PREFILLING:
+                continue
+            eng.prefill_step(rt, it.length)
+            done += it.length
+            if rt.phase is not Phase.PREFILLING:     # completed
+                self._after_prefill(rt)
+        return done
+
     def tick(self):
-        """One serving iteration: ingest -> schedule -> dispatch round N
-        -> deliver round N-1 (overlap) or round N (sync) -> gauges."""
+        """One serving iteration: ingest -> schedule (stage admissions)
+        -> prefill plan spans -> dispatch round N -> deliver round N-1
+        (overlap) or round N (sync) -> gauges.  Under a chunked
+        discipline a long prompt's chunk and the running decode round
+        share every tick (chunk-as-tick)."""
         t = self.now()
         self._ingest(t)
         self.eng.clock = t          # engine stamps land on the wall clock
         admitted = self._schedule()
+        pre_tok = self._run_prefill_plan()
         ticket = self._dispatch_round()
         prev, self._inflight = self._inflight, ticket
         if prev is not None:
@@ -435,7 +496,11 @@ class ServeLoop:
             active=sum(not f for f in self.eng.slot_free),
             free_blocks=self.eng.pool.available if self.eng.paged else -1,
             dispatch_width=ticket.width if ticket else 0,
-            overlapped=prev is not None and ticket is not None))
+            overlapped=prev is not None and ticket is not None,
+            prefill_tokens=pre_tok,
+            prefilling=sum(1 for rt in self.eng.slot_req
+                           if rt is not None
+                           and rt.phase is Phase.PREFILLING)))
         # stall detection: completely idle with a non-empty queue and a
         # policy that admits nothing (matches the batch loop's guard)
         if (ticket is None and self._inflight is None and self._waiting

@@ -61,6 +61,14 @@ class StepGauge:
     free_blocks: int            # KV pool occupancy (-1: unpaged)
     dispatch_width: int         # pow-2 batch bucket of the tick (0: idle)
     overlapped: bool            # a step was in flight during this tick
+    prefill_tokens: int = 0     # prompt tokens computed this tick (plan)
+    prefilling: int = 0         # slots mid-prefill after this tick
+
+    @property
+    def mixed(self) -> bool:
+        """The tick carried prefill work AND dispatched decodes — the
+        chunk-as-tick batch composition."""
+        return self.prefill_tokens > 0 and self.dispatch_width > 0
 
 
 def _pct(xs, p):
@@ -131,6 +139,13 @@ class ServingMetrics:
                 np.mean([g.active for g in self.gauges]))
             out["overlap_frac"] = float(
                 np.mean([g.overlapped for g in self.gauges]))
+            out["prefill_tokens"] = sum(
+                g.prefill_tokens for g in self.gauges)
+            # fraction of ticks mixing prefill spans with decode
+            # dispatch — 0.0 under StallingPrefill unless a prefill
+            # shares its tick with an in-flight decode's delivery
+            out["mixed_tick_frac"] = float(
+                np.mean([g.mixed for g in self.gauges]))
         return out
 
     def rows(self, prefix: str = "serve"):

@@ -165,6 +165,85 @@ def test_policy_conformance(rig, policy_key, disc_key):
     assert 1.0 / SUM_TOL < total_ratio < SUM_TOL
 
 
+#: streaming rows: the chunked disciplines the serving loop used to
+#: refuse.  ``None`` = no explicit discipline — the executor must adopt
+#: the policy's own (dynamic-chunk carries AdaptiveChunkedPrefill).
+STREAM_ROWS = [("fcfs", "chunked:16"), ("dynamic-chunk", None)]
+
+
+@pytest.mark.parametrize("policy_key,disc_key", STREAM_ROWS)
+def test_streaming_conformance(rig, policy_key, disc_key):
+    """Third executor: the live ServeLoop.  Wall-clock streaming changes
+    *when* work happens (arrival release, overlapped dispatch, chunk
+    spans riding serving ticks), never *what* is computed — the
+    streamed greedy tokens must equal the sync engine's exactly, and
+    all three executors must agree on the completion set and the
+    extreme-margin met flags.  (The simulator carries token *counts*,
+    not contents, so content parity is engine-vs-loop only.)"""
+    from repro.serving import ServeLoop
+    eng, model = rig
+
+    def _disc():
+        return make_discipline(disc_key) if disc_key else None
+
+    # --- sync engine leg
+    out = eng.run_policy(_rts(_workload()), _policy(policy_key, model),
+                         discipline=_disc(), model=model)
+
+    # --- simulator leg
+    sim_res = simulate([r for r, _ in _workload()], model, MAX_SLOTS,
+                       _policy(policy_key, model), discipline=_disc(),
+                       respect_arrivals=False)
+
+    # --- streaming leg: identical seeded trace served live
+    srv_pairs = _workload()
+    loop = ServeLoop(eng, _policy(policy_key, model), model=model,
+                     discipline=_disc())
+    assert loop.disc.chunk_size, "row must exercise a chunked plan"
+    loop.start(warm_lengths=[len(p) for _, p in srv_pairs])
+    loop.submit_trace(srv_pairs)
+    srv = loop.serve()
+
+    # completion sets: all three executors serve exactly the workload
+    ids = {r.req_id for r, _ in srv_pairs}
+    assert set(srv) == set(out) == set(sim_res.e2e) == ids
+
+    # streamed tokens == sync engine tokens, budgets exactly honoured
+    for r, _ in srv_pairs:
+        assert srv[r.req_id]["tokens"] == out[r.req_id]["tokens"]
+        assert len(srv[r.req_id]["tokens"]) == r.output_len
+
+    # met flags at the huge-margin extreme: met everywhere, on both the
+    # engine clock and the measured wall clock
+    assert all(sim_res.met.values())
+    assert all(v["met"] for v in out.values())
+    assert all(v["met"] for v in srv.values())
+    assert all(v["met_wall"] for v in srv.values())
+
+    # the loop really executed prefill through the tick plan (prefix
+    # cache is off, so plan spans cover every prompt token at least once)
+    total_prompt = sum(len(p) for _, p in srv_pairs)
+    assert sum(g.prefill_tokens for g in loop.metrics.gauges) \
+        >= total_prompt
+
+
+def test_streaming_met_flags_at_tiny_budgets(rig):
+    """Streaming leg of the opposite SLO extreme: ~1e-9× budgets are
+    unmeetable on any wall clock, and the loop must say so on both its
+    accounting and measured flags — matching the sync executors."""
+    from repro.serving import ServeLoop
+    eng, model = rig
+    pairs = _workload(slo_scale=1e-9)
+    loop = ServeLoop(eng, _policy("fcfs", model), model=model,
+                     discipline=make_discipline("chunked:16"))
+    loop.start(warm_lengths=[len(p) for _, p in pairs])
+    loop.submit_trace(pairs)
+    srv = loop.serve()
+    assert len(srv) == N
+    assert not any(v["met"] for v in srv.values())
+    assert not any(v["met_wall"] for v in srv.values())
+
+
 def test_met_flags_agree_at_tiny_budgets(rig):
     """The opposite SLO extreme: budgets ~1e-9× below any achievable
     latency — both executors must report zero attainment."""

@@ -42,6 +42,22 @@ def test_fcfs_completes_all(params):
         assert v["e2e"] >= v["ttft"] > 0
 
 
+def test_idle_wait_pulls_arrival_despite_float_rounding(params):
+    """Regression: with a carried-over engine clock t0 where
+    ``(t0 + a) - t0`` rounds *below* the arrival offset ``a``, the old
+    pull condition (``a <= clock - t0``) never admitted the request the
+    idle-wait had just advanced the clock to, livelocking run_policy.
+    The pair below is such a float pair."""
+    t0, a = 6.221853067085783, 0.013274810726759588
+    assert (t0 + a) - t0 < a            # the pair still triggers rounding
+    eng = Engine(CFG, params, max_slots=1, max_seq_len=128)
+    eng.clock = t0
+    rts = _rts(1)
+    rts[0].request.arrival_time = a
+    out = eng.run_policy(rts, "fcfs", respect_arrivals=True)
+    assert len(out[0]["tokens"]) == 6
+
+
 def test_planned_batches_execute_in_order(params):
     eng = Engine(CFG, params, max_slots=4, max_seq_len=128)
     rts = _rts(6, seed=1)
@@ -110,6 +126,37 @@ def test_chunked_prefill_identical_generations(params):
     b = Engine(CFG, params, max_slots=3, max_seq_len=128,
                chunked_prefill=16).run_fcfs(_rts(5, seed=6))
     assert all(a[i]["tokens"] == b[i]["tokens"] for i in a)
+
+
+def test_failing_policy_leaves_engine_config_untouched(params):
+    """Regression: run_policy used to execute a chunked discipline by
+    mutating ``engine.chunked_prefill`` per round (with a save/restore
+    dance).  The step-planner core threads the discipline through the
+    per-tick plan instead — a policy that blows up mid-run must leave
+    the engine's configuration exactly as constructed."""
+    from repro.core.policies import Decision, SchedulingPolicy
+
+    class Boom(SchedulingPolicy):
+        def __init__(self):
+            self.calls = 0
+
+        def decide(self, view):
+            self.calls += 1
+            if self.calls > 1:
+                raise RuntimeError("boom")
+            return Decision(admit=(0,))
+
+    eng = Engine(CFG, params, max_slots=2, max_seq_len=128)
+    with pytest.raises(RuntimeError, match="boom"):
+        eng.run_policy(_rts(3, seed=8), Boom(), discipline="chunked:16")
+    assert eng.chunked_prefill == 0          # as constructed
+    # and the mirror image: a chunk-configured engine driven under an
+    # explicit stall discipline keeps its own default
+    eng2 = Engine(CFG, params, max_slots=2, max_seq_len=128,
+                  chunked_prefill=16)
+    with pytest.raises(RuntimeError, match="boom"):
+        eng2.run_policy(_rts(3, seed=8), Boom(), discipline="stall")
+    assert eng2.chunked_prefill == 16
 
 
 def test_chunked_prefill_exact_ring_and_ssm():

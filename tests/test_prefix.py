@@ -396,13 +396,19 @@ def test_chunked_prefill_skips_cached_span(params):
     rec = _Rec()
     eng = Engine(CFG, params, max_slots=4, max_seq_len=256,
                  temperature=0.0, chunked_prefill=16, profiler=rec)
-    out = eng.run_fcfs([_rt(p, i) for i, p in enumerate(prompts)])
+    # serialized runs: the second prompt claims its pages after the
+    # first is indexed, so its chunk walk starts at the cached boundary
+    # (prefills staged in the *same* tick advance in parallel under
+    # chunk-as-tick and can only alias spans indexed when they start)
+    out = dict(eng.run_fcfs([_rt(prompts[0], 0)]))
+    out.update(eng.run_fcfs([_rt(prompts[1], 1)]))
     # request 1 prefilled only its 10-token unique suffix, in one chunk
     assert sum(rec.prefill) == len(prompts[0]) + (len(prompts[1]) - 48)
-    ref = Engine(CFG, params, max_slots=4, max_seq_len=256,
-                 temperature=0.0, chunked_prefill=16,
-                 prefix_cache=False).run_fcfs(
-        [_rt(p, i) for i, p in enumerate(prompts)])
+    ref_eng = Engine(CFG, params, max_slots=4, max_seq_len=256,
+                     temperature=0.0, chunked_prefill=16,
+                     prefix_cache=False)
+    ref = dict(ref_eng.run_fcfs([_rt(prompts[0], 0)]))
+    ref.update(ref_eng.run_fcfs([_rt(prompts[1], 1)]))
     for k in out:
         assert out[k]["tokens"] == ref[k]["tokens"]
 

@@ -173,25 +173,67 @@ def test_summary_and_gauges_sanity(params):
     assert rows and rows[0][0] == "serve_summary"
 
 
-def test_chunked_discipline_rejected(params):
-    eng = _engine(params)
-    with pytest.raises(NotImplementedError):
-        ServeLoop(eng, "fcfs", discipline="chunked:16")
-    # the typed subclass is what actually flies (and is catchable alone)
-    with pytest.raises(UnsupportedDisciplineError):
-        ServeLoop(_engine(params), "fcfs", discipline="chunked:16")
-    with pytest.raises(UnsupportedDisciplineError):
-        ServeLoop(_engine(params, chunked_prefill=16), "fcfs")
+def test_chunked_discipline_streams_end_to_end(params):
+    """Chunked prefill streams natively (chunk-as-tick): every request
+    completes with its full budget and the tokens equal the stalling
+    run's — chunk boundaries change timing, not greedy content (each
+    chunk attends exactly the same prefix KV)."""
+    prompts = _prompts(5, seed=20, lo=20, hi=40)
+    _, s_stall, _ = _run(params, overlap=True, paged=True, prompts=prompts)
+    loop, s_chunk, res = _run(params, overlap=True, paged=True,
+                              prompts=prompts, discipline="chunked:16")
+    assert loop.disc.chunk_size == 16
+    for a, b in zip(s_stall, s_chunk):
+        assert b.done and b.error is None
+        assert a.tokens == b.tokens and len(b.tokens) == 5
+    assert len(res) == len(prompts)
+    # at least one prompt spans several chunks: some tick carried
+    # prefill work while slots were still mid-prefill afterwards
+    gauges = loop.metrics.gauges
+    assert sum(g.prefill_tokens for g in gauges) >= \
+        sum(len(p) for p in prompts)
+    assert any(g.prefilling > 0 for g in gauges)
 
 
-def test_dynamic_chunk_policy_rejected_with_typed_error(params):
-    """dynamic-chunk carries its own AdaptiveChunkedPrefill: the loop
-    must refuse it at construction — loudly, not by silently running
-    whole-prompt prefill under a policy that believes it is chunking."""
+def test_chunked_engine_default_adopted_and_dynamic_chunk_streams(params):
+    """A chunk-configured engine streams under its own default, and
+    dynamic-chunk (which carries AdaptiveChunkedPrefill) is executed —
+    not refused — with every request completing."""
     from repro.core import PAPER_TABLE2
-    eng = _engine(params)
-    with pytest.raises(UnsupportedDisciplineError, match="dynamic|chunk"):
-        ServeLoop(eng, "dynamic-chunk", model=PAPER_TABLE2)
+    eng = _engine(params, chunked_prefill=16)
+    loop = ServeLoop(eng, "fcfs")
+    assert loop.disc.chunk_size == 16
+    eng2 = _engine(params, paged=True, num_blocks=64)
+    loop2 = ServeLoop(eng2, "dynamic-chunk", model=PAPER_TABLE2)
+    assert loop2.disc is loop2.pol.discipline    # identity: retune flows
+    loop2.start()
+    streams = [loop2.submit(p, max_new_tokens=4,
+                            slo=SLO(ttft=100.0, tpot=10.0))
+               for p in _prompts(4, seed=21, lo=20, hi=40)]
+    loop2.serve()
+    for st in streams:
+        assert st.done and st.error is None and len(st.tokens) == 4
+
+
+def test_chunked_on_mla_engine_raises_typed_error(params):
+    """The one remaining unsupported combination: MLA archs have no
+    chunked forward path, so a chunked discipline on an MLA engine is a
+    configuration error — typed, catchable, at construction."""
+    from repro.models.config import MLAConfig
+    mla_cfg = ModelConfig(name="tiny-mla", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=4,
+                          d_ff=128, vocab_size=128, dtype="float32",
+                          mla=MLAConfig(kv_lora_rank=16, q_lora_rank=0,
+                                        qk_nope_head_dim=8,
+                                        qk_rope_head_dim=8, v_head_dim=8))
+    mla_params = init_params(jax.random.PRNGKey(1), mla_cfg)
+    eng = Engine(mla_cfg, mla_params, max_slots=2, max_seq_len=128)
+    with pytest.raises(UnsupportedDisciplineError):
+        ServeLoop(eng, "fcfs", discipline="chunked:16")
+    # NotImplementedError subclassing keeps older handlers working
+    with pytest.raises(NotImplementedError):
+        ServeLoop(Engine(mla_cfg, mla_params, max_slots=2,
+                         max_seq_len=128), "fcfs", discipline="chunked:16")
 
 
 def test_stream_iteration_from_other_thread(params):
