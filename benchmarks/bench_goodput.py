@@ -48,7 +48,10 @@ from repro.models.cache import kv_bytes_per_token
 
 #: the sweep's architectures: the paper's evaluation model + a smaller
 #: dense code model + a long-context GQA model with heavy KV traffic
-CONFIGS = ("qwen2.5-7b", "starcoder2-3b", "phi4-mini-3.8b")
+#: + a non-dense entrant (MLA: latent-compressed KV makes its decode
+#: terms scale by the ckv/kpe bytes, not full per-head KV)
+CONFIGS = ("qwen2.5-7b", "starcoder2-3b", "phi4-mini-3.8b",
+           "deepseek-v2-lite-16b")
 
 #: every policy that draws a curve; quick mode keeps the acceptance
 #: field (fcfs + both paper policies + the W-index entrant)

@@ -1,0 +1,198 @@
+"""Sharded-serving benchmark: tensor-parallel decode scaling and the
+data-parallel fleet's attainment under overload.
+
+Standalone on purpose (not part of ``benchmarks.run``): the first thing
+this module does is force an 8-device CPU host
+(``--xla_force_host_platform_device_count=8``), which is process-global
+— running it in its own interpreter keeps every other suite on the
+normal single-device path.
+
+Row families (plus ``experiments/bench/BENCH_sharding.json``):
+
+* ``tp{N}_decode`` — paged decode µs/token through a mesh-sharded
+  engine at tp ∈ {1, 2, 4, 8} over the same prompts.  On this CPU
+  container the XLA "devices" are host threads sharing the same cores,
+  so µs/token does *not* drop with tp — the row's value is tracking
+  the SPMD overhead (all-gathers, per-shard dispatch) and, on a real
+  TPU host, becoming the scaling curve.  Token parity with the
+  unsharded engine is asserted on every tp point.
+* ``fleet{N}_...`` — single engine vs an N=2 :class:`EngineFleet` on
+  the same Poisson trace at ~2x the single engine's measured
+  saturation throughput.  The fleet must match-or-beat the single
+  engine's wall-clock SLO attainment (asserted; this is the
+  acceptance criterion for data-parallel serving actually helping).
+"""
+from __future__ import annotations
+
+import os
+
+# must precede any jax import in this process (device count is locked
+# at backend init)
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.data.synthetic import sample_serve_workload
+
+
+def _tiny_cfg():
+    from repro.models import ModelConfig
+    # 8 kv heads so every tp point in {1,2,4,8} head-shards evenly
+    return ModelConfig(name="bench-tp", family="dense", num_layers=2,
+                       d_model=128, num_heads=8, num_kv_heads=8,
+                       head_dim=16, d_ff=256, vocab_size=97,
+                       dtype="float32")
+
+
+def _mesh(tp: int):
+    import jax
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()[:tp]).reshape(1, tp)
+    return Mesh(devs, ("data", "model"))
+
+
+def _fill_slots(eng, n_prompt: int, budget: int, seed: int = 0):
+    """Occupy every slot with a RUNNING request (prefill done)."""
+    from repro.core.slo import SLO, Request
+    from repro.engine.request import RuntimeRequest
+    rng = np.random.default_rng(seed)
+    rts = []
+    for slot in range(eng.max_slots):
+        toks = rng.integers(1, eng.cfg.vocab_size - 1, n_prompt)
+        rt = RuntimeRequest(
+            request=Request(req_id=slot, task_type="chat",
+                            input_len=n_prompt, slo=SLO(),
+                            output_len=budget),
+            prompt_tokens=toks.astype(np.int32), max_new_tokens=budget)
+        eng.begin_prefill(rt, slot)
+        eng.prefill_step(rt)
+        rts.append(rt)
+    return rts
+
+
+def _tp_rows(quick: bool):
+    import jax
+
+    from repro.engine.engine import Engine
+    from repro.models import init_params
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_dev = jax.local_device_count()
+    tps = [t for t in (1, 2, 4, 8) if t <= n_dev]
+    rounds = 8 if quick else 24
+    slots = 4
+    rows, payload = [], {}
+    ref_tokens = None
+    for tp in tps:
+        eng = Engine(cfg, params, max_slots=slots, max_seq_len=256,
+                     mesh=None if tp == 1 else _mesh(tp))
+        rts = _fill_slots(eng, n_prompt=64, budget=rounds + 2)
+        eng.decode_round()                      # warm + first token
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            eng.decode_round()
+        wall = time.perf_counter() - t0
+        us_tok = wall / (rounds * slots) * 1e6
+        toks = [list(rt.generated) for rt in rts]
+        if ref_tokens is None:
+            ref_tokens = toks
+        assert toks == ref_tokens, f"tp={tp} decode tokens diverged"
+        payload[f"tp{tp}"] = {"us_per_token": us_tok,
+                              "devices": tp, "rounds": rounds,
+                              "batch": slots, "token_parity": True}
+        rows.append([f"tp{tp}_decode", round(us_tok, 2),
+                     f"devices={tp};batch={slots};rounds={rounds};"
+                     f"parity=1"])
+    payload["local_devices"] = n_dev
+    return rows, payload
+
+
+def _trace(n, seed, rate, scale):
+    return sample_serve_workload(n, 97, seed=seed, scale=scale,
+                                 arrival_rate=rate, in_range=(8, 48),
+                                 out_range=(4, 16))
+
+
+def _fleet_rows(quick: bool):
+    import jax
+
+    from repro.engine.engine import Engine
+    from repro.models import init_params
+    from repro.serving import EngineFleet, ServeLoop
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def make_engine():
+        return Engine(cfg, params, max_slots=4, max_seq_len=128)
+
+    n_cal = 8 if quick else 16
+    n = 16 if quick else 32
+    scale = 0.5 if quick else 0.25
+
+    # --- calibrate the single engine's saturation throughput: serve a
+    # backlogged trace (all arrivals at t=0) and take req/s
+    loop = ServeLoop(make_engine())
+    cal = _trace(n_cal, seed=7, rate=0.0, scale=10.0)
+    loop.start(warm_lengths=[len(p) for _, p in cal])
+    loop.submit_trace(cal)
+    t0 = time.perf_counter()
+    loop.serve()
+    sat_rate = n_cal / (time.perf_counter() - t0)
+    rate = 2.0 * sat_rate
+
+    def run(target):
+        trace = _trace(n, seed=13, rate=rate, scale=scale)
+        target.start(warm_lengths=[len(p) for _, p in trace])
+        target.submit_trace(trace)
+        target.serve()
+        return target.metrics.summary()
+
+    single = run(ServeLoop(make_engine()))
+    fleet = run(EngineFleet([make_engine() for _ in range(2)],
+                            mapper="least-loaded"))
+    assert fleet["n"] == single["n"] == n
+    assert fleet["attainment"] >= single["attainment"], (
+        f"fleet attainment {fleet['attainment']:.3f} fell below the "
+        f"single engine's {single['attainment']:.3f} at 2x saturation")
+    rows = []
+    for name, s in (("fleet1_single", single), ("fleet2_least_loaded",
+                                                fleet)):
+        rows.append([name, round(s["e2e_mean"] * 1e6, 1),
+                     f"att={s['attainment']:.3f};G={s['G']:.4f};"
+                     f"ttft_mean={s['ttft_mean'] * 1e3:.1f}ms;"
+                     f"qdepth={s.get('queue_depth_mean', 0):.1f};"
+                     f"tok_s={s['tokens_per_s']:.0f}"])
+    payload = {"saturation_rps": sat_rate, "rate": rate, "n": n,
+               "scale": scale, "single": single, "fleet2": fleet}
+    return rows, payload
+
+
+def main(quick: bool = False):
+    rows, tp_payload = _tp_rows(quick)
+    f_rows, f_payload = _fleet_rows(quick)
+    rows.extend(f_rows)
+    payload = {"tp_scaling": tp_payload, "fleet": f_payload}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_sharding.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# saved {path}")
+    emit(rows, ["name", "us_per_call", "derived"], "sharding")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

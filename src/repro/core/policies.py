@@ -939,6 +939,189 @@ class DynamicChunkPolicy(SchedulingPolicy):
         return self.base.decide(view)
 
 
+# ------------------------------------------------------- instance mapping
+@dataclasses.dataclass(frozen=True)
+class InstanceState:
+    """One serving instance as an :class:`InstanceMapper` sees it — a
+    load snapshot the fleet (or the multi-instance scheduler) builds
+    per routing decision.  Simulator callers that only need instance
+    identities can leave the load fields at their defaults."""
+    instance_id: int
+    queue_depth: int = 0      # submitted but not yet running
+    active: int = 0           # occupied engine slots
+    free_slots: int = 0
+    free_blocks: int = 0      # KV pool headroom (paged engines)
+    active_tokens: int = 0    # live context tokens across running slots
+
+
+class InstanceMapper:
+    """Maps arriving requests onto serving instances (paper §4.4).
+
+    One code path for both consumers: the real-serving ``EngineFleet``
+    routes arrivals through :meth:`map_one` / :meth:`plan`, and the
+    multi-instance scheduler's ``assign_instances`` (feeding
+    ``run_multi_instance`` in the simulator) delegates to
+    :meth:`map_batch` — so a mapper validated in simulation serves
+    unchanged.
+
+    ``map_batch`` returns one instance id per request, order-preserving
+    over the input.  ``plan`` returns per-instance *submission orders*
+    (lists of request indices): the default groups ``map_batch``'s
+    assignment preserving arrival order, while planning mappers
+    (:class:`AnnealedMapper`) reorder within each instance — the fleet
+    submits in exactly this order, so a priority plan becomes the
+    engines' FCFS admission order.
+    """
+
+    def map_batch(self, requests: Sequence[Request],
+                  states: Sequence[InstanceState]) -> List[int]:
+        raise NotImplementedError
+
+    def map_one(self, request: Request,
+                states: Sequence[InstanceState]) -> int:
+        return self.map_batch([request], states)[0]
+
+    def plan(self, requests: Sequence[Request],
+             states: Sequence[InstanceState]) -> List[List[int]]:
+        assign = self.map_batch(requests, states)
+        by_inst: Dict[int, List[int]] = {s.instance_id: [] for s in states}
+        for i, inst in enumerate(assign):
+            by_inst[inst].append(i)
+        return [by_inst[s.instance_id] for s in states]
+
+
+class RoundRobinMapper(InstanceMapper):
+    """Stateful round-robin — the trivial baseline."""
+
+    def __init__(self):
+        self._next = 0
+
+    def map_batch(self, requests, states):
+        out = []
+        for _ in requests:
+            out.append(states[self._next % len(states)].instance_id)
+            self._next += 1
+        return out
+
+
+class LeastLoadedMapper(InstanceMapper):
+    """Route to the instance with the fewest queued + running requests,
+    counting assignments made earlier in the same batch; ties go to the
+    lowest instance id."""
+
+    def map_batch(self, requests, states):
+        load = {s.instance_id: s.queue_depth + s.active for s in states}
+        order = sorted(load)
+        out = []
+        for _ in requests:
+            tgt = min(order, key=lambda i: (load[i], i))
+            load[tgt] += 1
+            out.append(tgt)
+        return out
+
+
+class SLOAffinityMapper(InstanceMapper):
+    """Pin each SLO class (``task_type``) to a home instance — the
+    SLOs-Serve-style per-class replica split (arXiv 2504.08784): a
+    class's requests share prefixes and latency profiles, so keeping
+    them together maximizes KV reuse and keeps the per-instance
+    workload unimodal.  Classes are assigned round-robin on first
+    sight; unseen-class spill goes least-loaded."""
+
+    def __init__(self):
+        self._home: Dict[str, int] = {}
+
+    def map_batch(self, requests, states):
+        ids = [s.instance_id for s in states]
+        out = []
+        for r in requests:
+            cls = r.task_type
+            if cls not in self._home:
+                self._home[cls] = ids[len(self._home) % len(ids)]
+            out.append(self._home[cls])
+        return out
+
+
+class MemoryGreedyMapper(InstanceMapper):
+    """The paper's Algorithm-2 assignment step (Eq. 20): round-robin to
+    the instance with the largest remaining memory, resetting the
+    accounting when the fullest instance cannot take the next request
+    (a maximal wave has been assigned)."""
+
+    def __init__(self, memory=None):
+        if memory is None:
+            from repro.core.profiler import MemoryModel
+            memory = MemoryModel(total_memory=float("inf"), mu=0.9,
+                                 sigma_per_token=1.0)
+        self.memory = memory
+
+    def map_batch(self, requests, states):
+        ids = [s.instance_id for s in states]
+        remaining = {i: self.memory.total for i in ids}
+        out = []
+        for req in requests:
+            need = self.memory.tokens_to_memory(
+                req.input_len + req.planning_output_len())
+            tgt = max(ids, key=lambda i: (remaining[i], -i))
+            if remaining[tgt] < need:
+                remaining = {i: self.memory.total for i in ids}
+                tgt = max(ids, key=lambda i: (remaining[i], -i))
+            remaining[tgt] -= need
+            out.append(tgt)
+        return out
+
+
+class AnnealedMapper(InstanceMapper):
+    """Full Algorithm 2: memory-greedy assignment then a per-instance
+    Algorithm-1 priority anneal (``priority_mapping_multi_jax`` when
+    ``use_jax`` — all instances × chains in one vmapped jit).  ``plan``
+    returns each instance's annealed batch order, which the fleet
+    replays as its submission order; ``map_batch`` exposes just the
+    assignment for callers that ignore ordering."""
+
+    def __init__(self, model, max_batch: int = 8, sa_params=None,
+                 memory=None, use_jax: bool = True):
+        self.model = model
+        self.max_batch = max_batch
+        self.sa_params = sa_params
+        self.memory = memory
+        self.use_jax = use_jax
+
+    def _scheduler(self, n_instances: int):
+        from repro.core.scheduler import SLOAwareScheduler
+        return SLOAwareScheduler(self.model, num_instances=n_instances,
+                                 max_batch=self.max_batch,
+                                 memory=self.memory,
+                                 sa_params=self.sa_params,
+                                 use_jax=self.use_jax)
+
+    def map_batch(self, requests, states):
+        sched = self._scheduler(len(states))
+        assignment = sched.schedule(list(requests)).assignment
+        ids = [s.instance_id for s in states]
+        return [ids[assignment[r.req_id]] for r in requests]
+
+    def plan(self, requests, states):
+        sched = self._scheduler(len(states))
+        outcome = sched.schedule(list(requests))
+        index_of = {id(r): i for i, r in enumerate(requests)}
+        return [[index_of[id(r)] for b in q.batches for r in b]
+                for q in outcome.queues]
+
+
+def make_mapper(obj: "Union[str, InstanceMapper]", **kwargs
+                ) -> InstanceMapper:
+    """Coerce a registry key (``"least-loaded"``, ``"route:annealed"``)
+    or mapper instance into an :class:`InstanceMapper`."""
+    if isinstance(obj, InstanceMapper):
+        return obj
+    name = obj if obj.startswith("route:") else f"route:{obj}"
+    out = make(name, **kwargs)
+    if not isinstance(out, InstanceMapper):
+        raise TypeError(f"{obj!r} is not an InstanceMapper")
+    return out
+
+
 # --------------------------------------------------------------- registry
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -1060,3 +1243,26 @@ def _make_chunked(arg=None, chunk_size=None, **_):
     else:
         size = chunk_size if chunk_size is not None else 64
     return ChunkedPrefill(size)
+
+
+@register("route")
+def _make_route(arg=None, model=None, max_batch=8, sa_params=None,
+                memory=None, use_jax=True, **_):
+    """Instance mappers: ``route:least-loaded`` (default),
+    ``route:round-robin``, ``route:slo-affinity``,
+    ``route:memory-greedy``, ``route:annealed`` (Algorithm 2; needs
+    ``model=``)."""
+    kind = arg or "least-loaded"
+    if kind == "round-robin":
+        return RoundRobinMapper()
+    if kind == "least-loaded":
+        return LeastLoadedMapper()
+    if kind == "slo-affinity":
+        return SLOAffinityMapper()
+    if kind == "memory-greedy":
+        return MemoryGreedyMapper(memory)
+    if kind == "annealed":
+        return AnnealedMapper(_require(model, "model=...", "route:annealed"),
+                              max_batch=max_batch, sa_params=sa_params,
+                              memory=memory, use_jax=use_jax)
+    raise ValueError(f"unknown instance mapper 'route:{kind}'")

@@ -16,7 +16,8 @@ from repro.core.annealing import SAParams, SAResult, priority_mapping
 from repro.core.events import SimResult, simulate
 from repro.core.latency_model import LinearLatencyModel
 from repro.core.objective import evaluate
-from repro.core.policies import ExecutionDiscipline, PlannedPolicy
+from repro.core.policies import (ExecutionDiscipline, InstanceState,
+                                 MemoryGreedyMapper, PlannedPolicy)
 from repro.core.profiler import MemoryModel, OutputLengthPredictor
 from repro.core.slo import Request, as_arrays
 
@@ -90,19 +91,17 @@ class SLOAwareScheduler:
     def assign_instances(self, requests: Sequence[Request]
                          ) -> List[List[Request]]:
         """Round-robin to the instance with the largest remaining memory;
-        reset when the fullest instance cannot take the next request."""
-        remaining = [self.memory.total] * self.num_instances
+        reset when the fullest instance cannot take the next request.
+        Delegates to the shared :class:`~repro.core.policies.
+        MemoryGreedyMapper` — the same object the serving
+        ``EngineFleet`` can route through — so simulation and real
+        serving assign by one code path."""
+        states = [InstanceState(instance_id=i)
+                  for i in range(self.num_instances)]
+        assign = MemoryGreedyMapper(self.memory).map_batch(requests, states)
         buckets: List[List[Request]] = [[] for _ in range(self.num_instances)]
-        for req in requests:
-            need = self.memory.tokens_to_memory(
-                req.input_len + req.planning_output_len())
-            tgt = int(np.argmax(remaining))
-            if remaining[tgt] < need:
-                # a maximal wave has been assigned; start a fresh iteration
-                remaining = [self.memory.total] * self.num_instances
-                tgt = int(np.argmax(remaining))
-            remaining[tgt] -= need
-            buckets[tgt].append(req)
+        for req, inst in zip(requests, assign):
+            buckets[inst].append(req)
         return buckets
 
     # ------------------------------------------------ main entry

@@ -156,7 +156,19 @@ def param_specs(params, cfg: ModelConfig, mesh: Mesh,
 
 def cache_specs(cache_shapes, cfg: ModelConfig, mesh: Mesh,
                 par: ParallelismConfig, batch: int):
-    """PartitionSpec pytree for a decode cache (from cache_spec shapes)."""
+    """PartitionSpec pytree for a decode cache (from cache_spec shapes).
+
+    Handles both layouts:
+      * dense per-slot ``[B, L, kv, hd]`` caches (``init_cache``);
+      * block-paged pools (``init_paged_cache``) — detected by the presence
+        of ``block_tables`` in the shapes pytree.  Page arrays
+        ``[num_blocks, block_size, kv, hd]`` shard on the kv-head axis
+        (dim 2) when the head count divides the tp axis; ``pos`` and
+        ``block_tables`` stay replicated so the host-side BlockPool,
+        prefix-reuse, and CoW logic never see a sharded array.
+    """
+    if "block_tables" in cache_shapes:
+        return _paged_cache_specs(cache_shapes, mesh, par)
     tp = par.tp_axis
     dp = par.dp_axes
     batch_ok = _div(batch, mesh, dp)
@@ -184,6 +196,40 @@ def cache_specs(cache_shapes, cfg: ModelConfig, mesh: Mesh,
         return out
 
     return {"pos": P(bspec),
+            "layers": [layer_spec(l) for l in cache_shapes["layers"]]}
+
+
+def _paged_cache_specs(cache_shapes, mesh: Mesh, par: ParallelismConfig):
+    """Specs for the block-paged pool layout (see cache_specs docstring).
+
+    GQA kv-head groups stay whole per shard: sharding dim 2 of
+    ``[num_blocks, block_size, kv, hd]`` by the tp axis puts kv/tp full
+    heads on each device, and the query heads of each group shard the
+    same way through ``wq``'s column shard — no cross-device attention.
+    Per-slot SSM state (``conv``/``ssm``, leading dim = max_slots) and all
+    host-consulted arrays (``pos``, ``block_tables``) remain replicated.
+    """
+    tp = par.tp_axis
+
+    def layer_spec(layer):
+        out = {}
+        for k, v in layer.items():
+            if k in ("k", "v"):            # [N, P, kv, hd]
+                hspec = tp if _div(v.shape[2], mesh, tp) else None
+                out[k] = P(None, None, hspec, None)
+            elif k in ("k_scale", "v_scale"):  # [N, P, kv, 1]
+                hspec = tp if _div(v.shape[2], mesh, tp) else None
+                out[k] = P(None, None, hspec, None)
+            elif k in ("ckv", "kpe"):      # [N, P, rank] — latent, no heads
+                out[k] = P(None, None, None)
+            elif k == "conv":              # [max_slots, K-1, C]
+                out[k] = P(None, None, None)
+            elif k == "ssm":               # [max_slots, nh, hd, ds]
+                out[k] = P(None, None, None, None)
+        return out
+
+    return {"pos": P(None),
+            "block_tables": P(None, None),
             "layers": [layer_spec(l) for l in cache_shapes["layers"]]}
 
 

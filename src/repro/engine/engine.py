@@ -52,6 +52,8 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.latency_model import LinearLatencyModel
 from repro.core.policies import (ChunkedPrefill, ExecutionDiscipline,
@@ -88,7 +90,7 @@ class Engine:
                  profiler: Optional[LatencyProfiler] = None,
                  chunked_prefill: int = 0, paged: Optional[bool] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, mesh=None, parallelism=None):
         """chunked_prefill > 0: split prompts into chunks of that size and
         interleave each chunk with a decode round for the running slots
         (Sarathi-style — new prompts no longer stall running decodes for
@@ -109,7 +111,22 @@ class Engine:
         prefill only the unique suffix.  Divergent writes into a shared
         page copy-on-write.  Disabled automatically for SSM/hybrid
         (recurrent state is not block-addressable), MLA and
-        sliding-window archs."""
+        sliding-window archs.
+
+        ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+        ``repro.launch.mesh.make_host_mesh``) turns on tensor-parallel
+        SPMD execution: params shard per ``distributed.sharding.
+        param_specs`` and the paged page arrays shard on the kv-head
+        axis (``cache_specs`` paged layout) while ``pos`` /
+        ``block_tables`` stay replicated, so every host-side path —
+        BlockPool accounting, prefix reuse, copy-on-write — is
+        untouched.  The jitted step fns pin their outputs
+        (``out_shardings``): logits/tokens replicated, cache on its
+        sharding, which also keeps buffer donation exact.  Requires the
+        paged layout.  ``parallelism`` overrides the
+        :class:`~repro.distributed.sharding.ParallelismConfig` (default:
+        tp on the ``model`` axis, no FSDP — serving replicates what it
+        cannot head-shard)."""
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -136,14 +153,17 @@ class Engine:
                                                   range(max_slots)]
             self.cache = init_paged_cache(cfg, max_slots, max_seq_len,
                                           num_blocks, block_size)
+            jit_kw = self._init_mesh(mesh, parallelism)
             # the paged step fns donate the cache: page writes are
-            # in-place scatters, never O(pool) copies
+            # in-place scatters, never O(pool) copies (out_shardings
+            # matching the committed input keeps donation exact under
+            # a mesh)
             self._decode_fn = jax.jit(self._decode_step_paged,
-                                      donate_argnums=(1,))
+                                      donate_argnums=(1,), **jit_kw)
             self._prefill_fn = jax.jit(self._prefill_paged,
-                                       donate_argnums=(1,))
+                                       donate_argnums=(1,), **jit_kw)
             self._chunk_fn = jax.jit(self._prefill_chunk_paged,
-                                     donate_argnums=(1,))
+                                     donate_argnums=(1,), **jit_kw)
             # prefix sharing needs position-faithful, block-addressable
             # KV: pure full-attention archs only
             self.prefix = RadixPrefixIndex(self.pool, block_size) \
@@ -151,6 +171,12 @@ class Engine:
                     and cfg.mla is None and not cfg.sliding_window) \
                 else None
         else:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh execution requires the paged KV layout "
+                    "(paged=True with an attention arch)")
+            self.mesh = None
+            self._jit_kw = {}
             self.pool = None
             self.prefix = None
             # slot pool: one batched dense cache over all slots
@@ -169,9 +195,57 @@ class Engine:
         # (the dense step merges with `where`, allocating fresh arrays)
         if self.paged:
             self._dispatch_fn = jax.jit(self._decode_dispatch_paged,
-                                        donate_argnums=(1,))
+                                        donate_argnums=(1,),
+                                        **self._jit_kw)
         else:
             self._dispatch_fn = jax.jit(self._decode_dispatch_dense)
+
+    # ------------------------------------------------------------- mesh
+    def _init_mesh(self, mesh, parallelism):
+        """Commit params and the paged cache to their NamedShardings and
+        build the ``out_shardings`` kwargs the step jits pin outputs
+        with (logits/sampled tokens replicated — sampling and the host
+        scheduling paths read them — cache on its head-sharded specs).
+
+        The Pallas paged-decode kernel does not partition under GSPMD,
+        so ``ops.set_tp_shards`` reroutes paged attention to the
+        pure-jnp gather reference whenever tp > 1 — XLA shards that on
+        the kv-head axis automatically (a ``shard_map`` wrap of the
+        kernel is the real-TPU follow-up; see docs/sharding.md).
+        """
+        self.mesh = mesh
+        self._jit_kw = {}
+        if mesh is None:
+            return self._jit_kw
+        from repro.distributed.sharding import (ParallelismConfig,
+                                                cache_specs, named,
+                                                param_specs)
+        from repro.kernels import ops
+        par = parallelism if parallelism is not None \
+            else ParallelismConfig(fsdp=False)
+        self.parallelism = par
+        self.params = jax.device_put(
+            self.params,
+            named(mesh, param_specs(self.params, self.cfg, mesh, par)))
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache)
+        self._cache_shardings = named(
+            mesh, cache_specs(shapes, self.cfg, mesh, par, self.max_slots))
+        self._repl = NamedSharding(mesh, P())
+        self.cache = jax.device_put(self.cache, self._cache_shardings)
+        ops.set_tp_shards(mesh.shape[par.tp_axis])
+        self._jit_kw = {
+            "out_shardings": (self._repl, self._cache_shardings)}
+        return self._jit_kw
+
+    def _commit(self, cache):
+        """Re-commit a cache pytree to its shardings.  Host round-trips
+        (``_warm_paged`` restore) produce uncommitted single-device
+        arrays that would silently violate the jits' donation/sharding
+        contract under a mesh; a no-op without one."""
+        if getattr(self, "mesh", None) is None:
+            return cache
+        return jax.device_put(cache, self._cache_shardings)
 
     # ------------------------------------------------------------ jitted
     def _decode_step(self, params, cache, tokens, active):
@@ -240,7 +314,7 @@ class Engine:
         saved = jax.tree.map(np.asarray, self.cache)
         out = fn(self.params, self.cache, *args)
         jax.block_until_ready(out)
-        self.cache = jax.tree.map(jnp.asarray, saved)
+        self.cache = self._commit(jax.tree.map(jnp.asarray, saved))
 
     # --------------------------------------- dispatch/sync split (serving)
     def _slice_slots(self, cache, width):
@@ -451,7 +525,7 @@ class Engine:
         if not self.pool.available and self.prefix is not None:
             self.prefix.evict(1)
         new = self.pool.alloc(1)[0]
-        self.cache = copy_page(self.cache, old, new)
+        self.cache = self._commit(copy_page(self.cache, old, new))
         self._slot_blocks[slot][bi] = new
         self.cache["block_tables"] = \
             self.cache["block_tables"].at[slot, bi].set(new)

@@ -21,6 +21,7 @@ from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 Mode = Literal["auto", "pallas", "interpret", "ref"]
 _MODE: Mode = "auto"
+_TP_SHARDS: int = 1
 
 
 def set_kernel_mode(mode: Mode):
@@ -28,10 +29,31 @@ def set_kernel_mode(mode: Mode):
     _MODE = mode
 
 
+def set_tp_shards(n: int):
+    """Declare the tensor-parallel shard count the cache pages live under.
+
+    ``pallas_call`` does not auto-partition under GSPMD — running the paged
+    Pallas kernel inside a tp>1 jit would force XLA to gather the full page
+    pool onto every device.  Until the kernel is wrapped in ``shard_map``
+    (real-TPU follow-up, see docs/sharding.md), the paged dispatchers route
+    to the pure-jnp gather reference, which the partitioner shards on the
+    head axis automatically.
+    """
+    global _TP_SHARDS
+    _TP_SHARDS = max(1, int(n))
+
+
 def _resolved() -> str:
     if _MODE != "auto":
         return _MODE
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _paged_resolved() -> str:
+    mode = _resolved()
+    if _TP_SHARDS > 1 and mode in ("pallas", "interpret"):
+        return "ref"
+    return mode
 
 
 def flash_attention(q, k, v, *, causal=True, window=0,
@@ -55,7 +77,7 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, block_k=256):
 def decode_attention_paged(q, k_pages, v_pages, block_tables, lengths, *,
                            window=0):
     """Flash-decode through a block table (paged KV pool)."""
-    mode = _resolved()
+    mode = _paged_resolved()
     if mode == "ref":
         return _ref.decode_attention_paged_ref(q, k_pages, v_pages,
                                                block_tables, lengths,
@@ -68,7 +90,7 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, lengths, *,
 def decode_attention_paged_q8(q, k_pages, k_scale, v_pages, v_scale,
                               block_tables, lengths, *, window=0):
     """int8-KV paged flash-decode (per-(token, head) bf16 scales)."""
-    mode = _resolved()
+    mode = _paged_resolved()
     if mode == "ref":
         from repro.models.cache import dequantize_kv
         kf = dequantize_kv(k_pages, k_scale)

@@ -16,6 +16,10 @@ planner policies always use batch mode: their plan needs the whole
 workload up front).  ``--discipline chunked:<n>`` and
 ``--policy dynamic-chunk`` stream natively: prefill chunks ride the
 serving ticks alongside running decode dispatches (chunk-as-tick).
+``--instances N`` scales streaming mode data-parallel: an
+:class:`repro.serving.EngineFleet` of N engines routed by ``--mapper``
+(least-loaded default; ``annealed`` runs the paper's Algorithm 2 as the
+routing plan — see docs/sharding.md).
 """
 from __future__ import annotations
 
@@ -33,7 +37,7 @@ from repro.data.synthetic import sample_serve_workload
 from repro.engine.engine import Engine
 from repro.engine.request import RuntimeRequest
 from repro.models import init_params
-from repro.serving import ServeLoop
+from repro.serving import EngineFleet, ServeLoop
 
 
 def _to_rts(pairs):
@@ -92,6 +96,12 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--no-overlap", action="store_true",
                     help="stream mode: synchronous reference loop")
+    ap.add_argument("--instances", type=int, default=1,
+                    help="stream mode: data-parallel EngineFleet size "
+                         "(N engines behind one front door)")
+    ap.add_argument("--mapper", default="least-loaded",
+                    help="fleet routing: round-robin | least-loaded | "
+                         "slo-affinity | memory-greedy | annealed")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -117,16 +127,26 @@ def main():
         # Chunked disciplines stream natively (chunk-as-tick); only
         # MLA + chunked raises UnsupportedDisciplineError, which is a
         # real configuration error the user must fix.
-        loop = ServeLoop(eng, pol, model=model,
-                         discipline=getattr(pol, "discipline", None)
-                         or discipline,
-                         overlap=not args.no_overlap)
+        disc = getattr(pol, "discipline", None) or discipline
+        if args.instances > 1:
+            engines = [eng] + [Engine(cfg, params,
+                                      max_slots=args.max_batch,
+                                      max_seq_len=256)
+                               for _ in range(args.instances - 1)]
+            loop = EngineFleet(engines, args.policy, mapper=args.mapper,
+                               model=model, discipline=disc,
+                               overlap=not args.no_overlap)
+        else:
+            loop = ServeLoop(eng, pol, model=model, discipline=disc,
+                             overlap=not args.no_overlap)
         loop.start(warm_lengths=[len(p) for _, p in pairs])
         loop.submit_trace(pairs)
         out = loop.serve()
         s = loop.metrics.summary()
-        print(f"policy={args.policy} mode=stream arch={cfg.name} "
-              f"discipline={loop.disc!r} overlap={not args.no_overlap} "
+        where = f"fleet{args.instances}:{args.mapper}" \
+            if args.instances > 1 else "stream"
+        print(f"policy={args.policy} mode={where} arch={cfg.name} "
+              f"discipline={disc!r} overlap={not args.no_overlap} "
               f"G={s['G']:.4f} attainment={s['attainment']:.2f} "
               f"ttft_mean={s['ttft_mean'] * 1e3:.1f}ms "
               f"tbt_p90={s['tbt_p90'] * 1e3:.2f}ms "

@@ -2,11 +2,16 @@
 engine with arrival-timed ingestion, per-request token streams, and
 overlapped host-scheduling / device-execution.  Wall-clock TTFT / TBT /
 e2e are *measured* at the token-delivery boundary rather than modelled.
+:class:`EngineFleet` scales the same loop data-parallel: N engines
+behind one submission queue, routed by an
+:class:`~repro.core.policies.InstanceMapper`.
 """
+from repro.serving.fleet import EngineFleet
 from repro.serving.loop import ServeLoop, UnsupportedDisciplineError
 from repro.serving.metrics import (RequestTimeline, ServingMetrics,
                                    StepGauge)
 from repro.serving.stream import TokenEvent, TokenStream
 
-__all__ = ["ServeLoop", "UnsupportedDisciplineError", "ServingMetrics",
-           "RequestTimeline", "StepGauge", "TokenEvent", "TokenStream"]
+__all__ = ["EngineFleet", "ServeLoop", "UnsupportedDisciplineError",
+           "ServingMetrics", "RequestTimeline", "StepGauge", "TokenEvent",
+           "TokenStream"]

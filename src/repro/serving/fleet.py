@@ -1,0 +1,195 @@
+"""Data-parallel serving: N engines behind one thread-safe front door.
+
+:class:`EngineFleet` runs one :class:`~repro.serving.loop.ServeLoop` per
+engine and routes arrivals through a registry
+:class:`~repro.core.policies.InstanceMapper` — the same objects the
+multi-instance scheduler (``SLOAwareScheduler.assign_instances``) and the
+simulator's ``run_multi_instance`` use, so Algorithm 2's instance
+assignment runs unchanged against real engines.
+
+Two submission modes:
+
+* **Online** — :meth:`submit` routes each arrival as it comes, against a
+  live :class:`~repro.core.policies.InstanceState` snapshot of every
+  loop (queue depth, occupied slots, KV-pool headroom).  This is the
+  least-loaded / SLO-affinity regime.
+* **Batch-planned** — :meth:`submit_trace` hands the whole trace to
+  ``mapper.plan``: a planning mapper (``route:annealed``, the paper's
+  Algorithm 2) both *assigns* requests to instances (memory-greedy,
+  Eq. 20) and *orders* each instance's queue (the per-instance
+  Algorithm-1 anneal).  The fleet submits in exactly that order; each
+  loop's arrival-stable ingestion turns the plan into its FCFS
+  admission order, so the annealed priority plan is what the engines
+  actually execute.
+
+Every loop gets a disjoint request-id range (``id_base``), so results,
+streams and the aggregated :class:`~repro.serving.metrics.ServingMetrics`
+share one namespace.  ``serve()`` drives all loops concurrently in
+threads — the GIL interleaves host-side scheduling while each loop's
+device work proceeds under its own dispatch chain.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.policies import InstanceState, make_mapper
+from repro.core.slo import SLO, Request
+from repro.engine.engine import Engine
+from repro.serving.loop import ServeLoop
+from repro.serving.metrics import ServingMetrics
+from repro.serving.stream import TokenStream
+
+# disjoint per-loop request-id ranges (see ServeLoop id_base)
+_ID_STRIDE = 1_000_000
+
+
+class EngineFleet:
+    """N serving loops behind one submission queue.
+
+    Parameters
+    ----------
+    engines:
+        Fresh engines, one per instance (their pools become the fleet's
+        capacity).  Engines may themselves be mesh-sharded (tensor
+        parallel) — the two axes compose.
+    policy / model / discipline / overlap / bucket_batches:
+        Forwarded to every member :class:`ServeLoop`.
+    mapper:
+        :class:`~repro.core.policies.InstanceMapper` instance or
+        registry key (``"least-loaded"`` default, ``"round-robin"``,
+        ``"slo-affinity"``, ``"memory-greedy"``, ``"annealed"``) —
+        mapper kwargs (``model=...``) ride through ``make_mapper``.
+    """
+
+    def __init__(self, engines: Sequence[Engine], policy="fcfs", *,
+                 mapper="least-loaded",
+                 model: Optional[LinearLatencyModel] = None,
+                 discipline=None, overlap: bool = True,
+                 bucket_batches: bool = True, **mapper_kw):
+        if not engines:
+            raise ValueError("EngineFleet needs at least one engine")
+        self.loops: List[ServeLoop] = [
+            ServeLoop(eng, policy, model=model, discipline=discipline,
+                      overlap=overlap, bucket_batches=bucket_batches,
+                      id_base=i * _ID_STRIDE)
+            for i, eng in enumerate(engines)]
+        self.mapper = make_mapper(mapper, model=model, **mapper_kw)
+        self._lock = threading.Lock()
+
+    def __len__(self):
+        return len(self.loops)
+
+    # ------------------------------------------------------------ routing
+    def _states(self) -> List[InstanceState]:
+        """Live load snapshot of every loop, for the mapper."""
+        out = []
+        for i, lp in enumerate(self.loops):
+            eng = lp.eng
+            with lp._lock:
+                queued = len(lp._inbox)
+            queued += len(lp._future) + len(lp._waiting)
+            active = sum(not f for f in eng.slot_free)
+            toks = sum(rt.input_len + len(rt.generated)
+                       for rt in eng.slot_req if rt is not None)
+            out.append(InstanceState(
+                instance_id=i, queue_depth=queued, active=active,
+                free_slots=len(eng.free_slots()),
+                free_blocks=eng.pool.available if eng.paged else 0,
+                active_tokens=toks))
+        return out
+
+    # --------------------------------------------------------- submission
+    def submit(self, prompt_tokens, *, max_new_tokens: int,
+               slo: Optional[SLO] = None, task_type: str = "chat",
+               arrival_time: Optional[float] = None,
+               request: Optional[Request] = None,
+               on_token=None) -> TokenStream:
+        """Route one arrival to an instance and enqueue it there
+        (thread-safe; same signature as :meth:`ServeLoop.submit`)."""
+        if request is None:
+            request = Request(
+                req_id=-1, task_type=task_type, input_len=len(prompt_tokens),
+                slo=slo if slo is not None else SLO(),
+                output_len=max_new_tokens,
+                arrival_time=arrival_time if arrival_time is not None
+                else 0.0)
+        with self._lock:       # mapper state (round-robin cursor, homes)
+            inst = self.mapper.map_one(request, self._states())
+        return self.loops[inst].submit(
+            prompt_tokens, max_new_tokens=max_new_tokens,
+            arrival_time=arrival_time, request=request, on_token=on_token)
+
+    def submit_trace(self, pairs) -> List[TokenStream]:
+        """Plan a whole ``[(Request, prompt_tokens)]`` trace through the
+        mapper and submit each instance's queue in plan order (see
+        module docstring: a planning mapper's per-instance order becomes
+        that engine's admission order).  Returns streams in the original
+        trace order."""
+        pairs = list(pairs)
+        reqs = [r for r, _ in pairs]
+        with self._lock:
+            plan = self.mapper.plan(reqs, self._states())
+        streams: Dict[int, TokenStream] = {}
+        for inst, order in enumerate(plan):
+            for i in order:
+                r, toks = pairs[i]
+                streams[i] = self.loops[inst].submit(
+                    toks, max_new_tokens=r.planning_output_len(), request=r)
+        return [streams[i] for i in range(len(pairs))]
+
+    # ----------------------------------------------------------- serving
+    def start(self, warm_lengths: Sequence[int] = ()):
+        """Warm every member loop, then stamp one shared epoch — if each
+        loop stamped its own at warm time, loop 0's clock would run for
+        the whole of loop 1..N's compile warm-up and every early arrival
+        would be charged seconds of phantom waiting."""
+        fresh = [lp for lp in self.loops if lp._t0 is None]
+        for lp in fresh:
+            lp.start(warm_lengths)
+        t0 = time.perf_counter()
+        for lp in fresh:
+            lp._t0 = t0
+        return self
+
+    def serve(self, poll: float = 0.0002) -> Dict[int, dict]:
+        """Drive every loop to completion concurrently; returns the
+        merged result dict (disjoint request-id ranges)."""
+        self.start()
+        errs: List[BaseException] = []
+
+        def run(lp):
+            try:
+                lp.serve(poll)
+            except BaseException as e:   # surface worker failures
+                errs.append(e)
+
+        threads = [threading.Thread(target=run, args=(lp,), daemon=True)
+                   for lp in self.loops]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errs:
+            raise errs[0]
+        return self.results()
+
+    # ------------------------------------------------------------ output
+    def results(self) -> Dict[int, dict]:
+        out: Dict[int, dict] = {}
+        for lp in self.loops:
+            out.update(lp.results())
+        return out
+
+    def streams(self) -> Dict[int, TokenStream]:
+        out: Dict[int, TokenStream] = {}
+        for lp in self.loops:
+            out.update(lp.streams())
+        return out
+
+    @property
+    def metrics(self) -> ServingMetrics:
+        """Fleet-wide aggregated metrics (union of per-loop sinks)."""
+        return ServingMetrics.aggregate([lp.metrics for lp in self.loops])

@@ -119,13 +119,17 @@ class ServeLoop:
     bucket_batches:
         Pad decode dispatches to pow-2 slot-prefix buckets (paged
         engines only) instead of always running the full slot pool.
+    id_base:
+        Starting request id — fleet members get disjoint ranges so one
+        aggregated metrics/result namespace never collides.
     """
 
     def __init__(self, engine: Engine, policy="fcfs", *,
                  model: Optional[LinearLatencyModel] = None,
                  discipline=None, overlap: bool = True,
                  bucket_batches: bool = True,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 id_base: int = 0):
         self.eng = engine
         self.pol, self.preemptive = resolve_policy(
             policy, model=model, max_batch=engine.max_slots)
@@ -158,7 +162,9 @@ class ServeLoop:
         self._inflight: Optional[_Ticket] = None
         self._feed = None                    # [max_slots, 1] device ids
         self._t0: Optional[float] = None
-        self._next_id = 0
+        # id_base offsets request ids so loops sharing a fleet-wide
+        # metrics/result namespace never collide
+        self._next_id = id_base
         self._stall_spins = 0
         self._stopped = False
 

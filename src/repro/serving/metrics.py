@@ -101,6 +101,22 @@ class ServingMetrics:
     def on_gauge(self, g: StepGauge):
         self.gauges.append(g)
 
+    @classmethod
+    def aggregate(cls, parts: "List[ServingMetrics]") -> "ServingMetrics":
+        """Fleet-wide view: merge per-loop sinks into one.  Request ids
+        are disjoint across fleet members (``ServeLoop(id_base=...)``),
+        so timelines/attainment merge by union; gauges interleave by
+        tick time.  ``summary()`` on the result reports fleet
+        attainment/goodput over every request and sums token
+        throughput."""
+        out = cls()
+        for p in parts:
+            out.timelines.update(p.timelines)
+            out._met.update(p._met)
+            out.gauges.extend(p.gauges)
+        out.gauges.sort(key=lambda g: g.t)
+        return out
+
     # ----------------------------------------------------------- reports
     def met(self, req_id: int) -> bool:
         return self._met.get(req_id, False)

@@ -12,6 +12,7 @@ DOC_FILES = [ROOT / "README.md",
              ROOT / "docs" / "annealer.md",
              ROOT / "docs" / "paged_kv.md",
              ROOT / "docs" / "serving.md",
+             ROOT / "docs" / "sharding.md",
              ROOT / "docs" / "evaluation.md"]
 
 
@@ -31,7 +32,7 @@ def test_docs_exist_and_linked_from_readme():
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     for page in ("docs/ARCHITECTURE.md", "docs/annealer.md",
                  "docs/paged_kv.md", "docs/serving.md",
-                 "docs/evaluation.md"):
+                 "docs/sharding.md", "docs/evaluation.md"):
         assert page in readme, f"README does not link {page}"
         assert (ROOT / page).exists(), f"{page} missing"
 

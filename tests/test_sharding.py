@@ -108,6 +108,202 @@ def test_sharded_forward_runs_on_mesh():
                                rtol=2e-2)
 
 
+def _paged_cfg(kv_heads=8):
+    from repro.models import ModelConfig
+    return ModelConfig(name="t-paged", family="dense", num_layers=2,
+                       d_model=8 * kv_heads, num_heads=kv_heads,
+                       num_kv_heads=kv_heads, head_dim=8,
+                       d_ff=32, vocab_size=97, dtype="float32")
+
+
+def test_paged_cache_specs_head_sharding():
+    """Paged layout: page arrays shard the kv-head axis when divisible,
+    block tables / pos stay replicated (they are host bookkeeping)."""
+    from repro.models.cache import init_paged_cache
+
+    class FakeMesh:
+        shape = {"data": 1, "model": 2}
+    cfg = _paged_cfg(kv_heads=8)
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, 4, 128, 33, 16))
+    specs = cache_specs(shapes, cfg, FakeMesh(), ParallelismConfig(), 4)
+    assert specs["block_tables"] == P(None, None)
+    assert specs["pos"] == P(None)
+    for lyr in specs["layers"]:
+        # [num_blocks, page, kv_heads, head_dim] — heads on "model"
+        assert lyr["k"] == P(None, None, "model", None)
+        assert lyr["v"] == P(None, None, "model", None)
+
+
+def test_paged_cache_specs_indivisible_heads_replicate():
+    """kv heads not divisible by the tp axis -> pages replicate rather
+    than shard unevenly (never seq-shard pages: a page is a time slab,
+    every shard needs all of it)."""
+    from repro.models.cache import init_paged_cache
+
+    class FakeMesh:
+        shape = {"data": 1, "model": 2}
+    cfg = _paged_cfg(kv_heads=3)
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, 4, 128, 33, 16))
+    specs = cache_specs(shapes, cfg, FakeMesh(), ParallelismConfig(), 4)
+    for lyr in specs["layers"]:
+        assert lyr["k"] == P(None, None, None, None)
+
+
+def test_make_host_mesh_sizing():
+    """make_host_mesh spans whatever the host exposes: tp defaults to
+    local_device_count // data, explicit tp is honored."""
+    from repro.launch.mesh import make_host_mesh
+    n = jax.local_device_count()
+    mesh = make_host_mesh()
+    assert dict(mesh.shape) == {"data": 1, "model": n}
+    mesh = make_host_mesh(tp=1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+# ------------------------------------------------- instance mappers
+def _req(i, task="chat", l_in=32, l_out=16):
+    from repro.core.slo import SLO, Request
+    return Request(req_id=i, task_type=task, input_len=l_in, slo=SLO(),
+                   output_len=l_out)
+
+
+def _states(n, **kw):
+    from repro.core.policies import InstanceState
+    return [InstanceState(instance_id=i, **{k: v[i] for k, v in
+                                            kw.items()})
+            for i in range(n)]
+
+
+def test_mapper_round_robin_and_least_loaded():
+    from repro.core.policies import make_mapper
+    rr = make_mapper("round-robin")
+    assert rr.map_batch([_req(i) for i in range(5)], _states(2)) == \
+        [0, 1, 0, 1, 0]
+    assert rr.map_one(_req(5), _states(2)) == 1     # cursor persists
+    ll = make_mapper("least-loaded")
+    st = _states(3, queue_depth=[4, 0, 1], active=[0, 2, 0])
+    # loads 4/2/1 -> first goes to 2, then 1 and 2 tie -> lowest id
+    assert ll.map_batch([_req(0), _req(1), _req(2)], st) == [2, 1, 2]
+
+
+def test_mapper_slo_affinity_homes_classes():
+    from repro.core.policies import make_mapper
+    m = make_mapper("slo-affinity")
+    reqs = [_req(0, "chat"), _req(1, "code"), _req(2, "chat"),
+            _req(3, "summ"), _req(4, "code")]
+    out = m.map_batch(reqs, _states(2))
+    assert out == [0, 1, 0, 0, 1]    # chat->0, code->1, summ wraps to 0
+
+
+def test_memory_greedy_matches_eq20_reference():
+    """Regression: the shared mapper reproduces the inline Eq. 20 loop
+    that SLOAwareScheduler.assign_instances used to carry."""
+    from repro.core.policies import MemoryGreedyMapper
+    from repro.core.profiler import MemoryModel
+    mem = MemoryModel(total_memory=200.0, mu=0.9, sigma_per_token=1.0)
+    rng = np.random.default_rng(0)
+    reqs = [_req(i, l_in=int(rng.integers(8, 80)),
+                 l_out=int(rng.integers(8, 40))) for i in range(40)]
+    got = MemoryGreedyMapper(mem).map_batch(reqs, _states(3))
+
+    remaining = [mem.total] * 3                     # inline reference
+    want = []
+    for r in reqs:
+        need = mem.tokens_to_memory(r.input_len + r.planning_output_len())
+        tgt = int(np.argmax(remaining))
+        if remaining[tgt] < need:
+            remaining = [mem.total] * 3
+            tgt = 0
+        remaining[tgt] -= need
+        want.append(tgt)
+    assert got == want
+    assert len(set(got)) == 3                       # all instances used
+
+
+def test_scheduler_assign_instances_delegates_to_mapper():
+    from repro.core import PAPER_TABLE2
+    from repro.core.policies import MemoryGreedyMapper
+    from repro.core.profiler import MemoryModel
+    from repro.core.scheduler import SLOAwareScheduler
+    mem = MemoryModel(total_memory=500.0)
+    sched = SLOAwareScheduler(PAPER_TABLE2, num_instances=2, memory=mem)
+    reqs = [_req(i, l_in=16 + 13 * i) for i in range(9)]
+    buckets = sched.assign_instances(reqs)
+    flat = MemoryGreedyMapper(mem).map_batch(reqs, _states(2))
+    for inst in range(2):
+        assert [r.req_id for r in buckets[inst]] == \
+            [r.req_id for r, a in zip(reqs, flat) if a == inst]
+
+
+def test_mapper_plan_preserves_order():
+    """The default plan groups map_batch output without reordering —
+    the fleet submits each instance's queue in arrival order."""
+    from repro.core.policies import make_mapper
+    m = make_mapper("least-loaded")
+    reqs = [_req(i) for i in range(7)]
+    plan = m.plan(reqs, _states(2))
+    assert sorted(i for q in plan for i in q) == list(range(7))
+    for q in plan:
+        assert q == sorted(q)
+
+
+def test_mapper_annealed_plan_covers_all():
+    from repro.core import PAPER_TABLE2, SAParams
+    from repro.core.policies import make_mapper
+    m = make_mapper("annealed", model=PAPER_TABLE2, max_batch=4,
+                    sa_params=SAParams(iters=40, seed=0))
+    reqs = [_req(i, l_in=16 + 9 * i) for i in range(10)]
+    plan = m.plan(reqs, _states(2))
+    assert sorted(i for q in plan for i in q) == list(range(10))
+
+
+# ------------------------------------------------- fleet (single device)
+def test_fleet_token_parity_single_device():
+    """A 2-engine fleet produces the same greedy tokens as one loop on
+    the same backlogged trace (no mesh: plain engines, tier-1 safe)."""
+    from repro.engine.engine import Engine
+    from repro.serving import EngineFleet, ServeLoop
+
+    cfg = _paged_cfg(kv_heads=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    pairs = [(_req(i, l_in=n, l_out=4),
+              rng.integers(1, 96, n).astype(np.int32))
+             for i, n in enumerate(rng.integers(6, 24, 6).tolist())]
+
+    def run(target):
+        streams = target.submit_trace([(r, t) for r, t in pairs])
+        target.serve()
+        return [s.tokens for s in streams]
+
+    single = run(ServeLoop(Engine(cfg, params, max_slots=2,
+                                  max_seq_len=64)))
+    fleet = EngineFleet([Engine(cfg, params, max_slots=2, max_seq_len=64)
+                         for _ in range(2)], mapper="round-robin")
+    assert run(fleet) == single
+    m = fleet.metrics.summary()
+    assert m["n"] == 6 and m["tokens"] == 24
+
+
+@pytest.mark.slow
+def test_sharded_serving_multidevice():
+    """Full sharded-serving verification on a forced 8-device CPU host
+    (subprocess: the device count is locked at first jax init).  Covers
+    sharded-vs-single logits parity <= 1e-5 (prefill / chunked /
+    decode), real head-sharded page placement, engine + fleet token
+    parity, pool invariants and CoW under the mesh."""
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(root, "tests", "helpers", "verify_sharding.py")],
+        env=dict(os.environ, PYTHONPATH=os.path.join(root, "src")),
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ALL OK" in out.stdout
+
+
 def test_moe_shard_map_matches_local():
     """MoE FFN with a mesh ctx == MoE FFN without (1x1 mesh)."""
     from repro.models.moe import ShardingCtx, init_moe, moe_ffn
